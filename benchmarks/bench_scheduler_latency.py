@@ -1,0 +1,46 @@
+"""Scheduler decision latency at scale: Algorithm 1 must stay cheap as the
+node count grows (it is on every pod-submission critical path)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ICOScheduler, InterferenceQuantifier
+from repro.cluster.workloads import Pod
+
+
+def run(fast: bool = True):
+    out = []
+    sizes = (100, 1000) if fast else (100, 1000, 10000)
+    for n in sizes:
+        rng = np.random.default_rng(0)
+        hists = np.zeros((n, 4, 200))
+        hists[:, :, 20] = rng.integers(1, 50, (n, 4))
+        data = {
+            "cpu_cur": rng.uniform(2, 20, n),
+            "cpu_sum": np.full(n, 32.0),
+            "mem_cur": rng.uniform(4, 40, n),
+            "mem_sum": np.full(n, 64.0),
+            "online_hists": hists,
+            "offline_hists": np.zeros((n, 4, 200)),
+            "features": rng.normal(0, 1, (n, 45)),
+            "online_qps_sum": rng.uniform(0, 500, n),
+        }
+        # lightweight linear predictor keeps this a scheduler-cost benchmark
+        sched = ICOScheduler(InterferenceQuantifier(lambda x: x[:, 0] * 0.1))
+        pod = Pod("web_search", 200.0, True)
+        pod.cpu_demand, pod.mem_demand = 4.0, 3.0
+        sched.select_node(pod, data)  # warm
+        t0 = time.time()
+        reps = 10
+        for _ in range(reps):
+            sel = sched.select_node(pod, data)
+        us = (time.time() - t0) / reps * 1e6
+        out.append((f"scheduler_latency.n{n}", us, f"selected={sel}"))
+    return out
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(map(str, row)))

@@ -1,0 +1,31 @@
+"""Paper Figs 13-15: ICO vs RR / HUP / LQP — online response times
+(avg/p90/p99) and cross-node CPU/MEM utilization std, identical traces."""
+from __future__ import annotations
+
+import time
+
+from repro.cluster.experiment import compare_schedulers
+
+
+def run(fast: bool = True):
+    n_pods = 40 if fast else 90
+    t0 = time.time()
+    res = compare_schedulers(num_pods=n_pods, num_nodes=12, seed=7)
+    total_us = (time.time() - t0) * 1e6
+    out = []
+    base = res["HUP"]
+    for name, r in res.items():
+        rel = (1 - r.avg_rt / base.avg_rt) * 100 if base.avg_rt else 0.0
+        out.append((
+            f"schedulers.{name}",
+            total_us / len(res),
+            f"avg_rt={r.avg_rt:.2f};p90={r.p90_rt:.2f};p99={r.p99_rt:.2f};"
+            f"cpu_std={r.cpu_util_std:.2f};mem_std={r.mem_util_std:.2f};"
+            f"placed={r.placed};vs_hup_avg={rel:+.1f}%",
+        ))
+    return out
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(map(str, row)))

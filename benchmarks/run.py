@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper table/figure (+ substrate
+benches). Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.bench_motivation",       # Table I / Figs 1-4
+    "benchmarks.bench_resource_model",   # Figs 6-7
+    "benchmarks.bench_predictors",       # Table II / Figs 8-12
+    "benchmarks.bench_schedulers",       # Figs 13-15
+    "benchmarks.bench_scheduler_latency",
+    "benchmarks.bench_metric_pipeline",
+    "benchmarks.bench_kernels",
+    "benchmarks.bench_roofline",         # EXPERIMENTS.md §Roofline source
+]
+
+
+def main() -> None:
+    fast = "--full" not in sys.argv
+    print("name,us_per_call,derived")
+    for modname in MODULES:
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            t0 = time.time()
+            for name, us, derived in mod.run(fast=fast):
+                print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
+        except Exception:
+            print(f"{modname},0,ERROR")
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Simulated co-location cluster: nodes, workloads, traces, experiments."""
+from repro.cluster.simulator import Cluster, NodeSpec, S_ON, S_OFF
+from repro.cluster.workloads import (
+    Pod,
+    ONLINE_PROFILES,
+    OFFLINE_PROFILES,
+    ONLINE_NAMES,
+    OFFLINE_NAMES,
+)
+
+__all__ = [
+    "Cluster",
+    "NodeSpec",
+    "S_ON",
+    "S_OFF",
+    "Pod",
+    "ONLINE_PROFILES",
+    "OFFLINE_PROFILES",
+    "ONLINE_NAMES",
+    "OFFLINE_NAMES",
+]

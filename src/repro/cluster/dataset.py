@@ -1,0 +1,109 @@
+"""Training-data generation for the Scheduling Latency Prediction Module.
+
+Replays randomized placements on the simulator and records, per placement,
+the Table-III feature row (pod QPS + node telemetry at decision time) and
+the label: the pod's realized average runqlat over the observation window.
+Also generates the QPS->(CPU, MEM) dataset for the Resource Prediction
+Module (Figs. 6-7).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import metric
+from repro.core.predictors.features import runqlat_summary
+from repro.cluster import workloads as W
+from repro.cluster.simulator import Cluster
+from repro.cluster.workloads import Pod
+
+
+def _random_pod(rng) -> Pod:
+    if rng.random() < 0.55:
+        name = rng.choice(W.ONLINE_NAMES)
+        prof = W.ONLINE_PROFILES[name]
+        qps = float(rng.uniform(50, 900))
+        pod = Pod(name, qps, True)
+        pod.cpu_demand = prof.cpu_per_qps * qps + prof.cpu_base
+        pod.mem_demand = prof.mem_per_qps * qps + prof.mem_base
+    else:
+        name = rng.choice(W.OFFLINE_NAMES)
+        prof = W.OFFLINE_PROFILES[name]
+        cores = float(rng.choice(prof.cores_choices))
+        pod = Pod(name, 0.0, False, duration=int(rng.integers(*prof.duration_range)))
+        pod.cpu_demand = cores
+        pod.mem_demand = cores * prof.mem_per_core
+    return pod
+
+
+def generate_latency_dataset(
+    num_placements: int = 400,
+    num_nodes: int = 10,
+    window: int = 30,
+    seed: int = 0,
+):
+    """Returns (X, y): X (M, 42) Table-III rows, y (M,) realized avg runqlat.
+
+    Only online placements produce rows (the model predicts the latency an
+    online pod would suffer, Eq. 3) but offline pods are co-placed to create
+    the interference the model must learn.
+    """
+    rng = np.random.default_rng(seed)
+    cluster = Cluster(num_nodes=num_nodes, seed=seed)
+    cluster.rollout(window)  # warm telemetry
+
+    X, y = [], []
+    watched: list[tuple[int, np.ndarray]] = []  # (uid, feature_row)
+
+    for step in range(num_placements):
+        data = cluster.nodes_data()
+        pod = _random_pod(rng)
+        # random placement -> diverse (features, outcome) coverage
+        candidates = np.arange(cluster.n)
+        rng.shuffle(candidates)
+        placed_node = -1
+        for c in candidates:
+            if cluster.place(pod, int(c)):
+                placed_node = int(c)
+                break
+        if placed_node < 0:
+            # cluster full: free a random online pod
+            uids = list(cluster._pod_slots)
+            cluster.remove(uids[rng.integers(len(uids))])
+            continue
+
+        if pod.is_online:
+            row = np.concatenate([[pod.qps], data["features"][placed_node]])
+            watched.append((pod.uid, row, placed_node))
+
+        cluster.rollout(window)
+
+        # harvest labels for watched pods placed last round
+        still = []
+        for uid, row, node in watched:
+            kind, n_, s_ = cluster._pod_slots.get(uid, (None, None, None))
+            if kind is None:
+                continue
+            hist = cluster.last["hist_on"][n_, s_]
+            label = float(metric.avg_runqlat(hist))
+            X.append(row)
+            y.append(label)
+        watched = []
+
+        # occasionally retire pods to keep churn realistic
+        if rng.random() < 0.35 and cluster._pod_slots:
+            uids = list(cluster._pod_slots)
+            cluster.remove(uids[rng.integers(len(uids))])
+
+    return np.asarray(X, np.float64), np.asarray(y, np.float64)
+
+
+def generate_resource_dataset(workload: str, num_points: int = 120, seed: int = 0):
+    """(qps, cpu, mem) samples for one online workload type (Figs. 6-7)."""
+    rng = np.random.default_rng(seed)
+    prof = W.ONLINE_PROFILES[workload]
+    qps = rng.uniform(20, 1200, num_points)
+    cpu = prof.cpu_per_qps * qps + prof.cpu_base
+    cpu = cpu * (1 + 0.05 * rng.normal(size=num_points))
+    mem = prof.mem_per_qps * qps + prof.mem_base
+    mem = mem * (1 + 0.04 * rng.normal(size=num_points))
+    return qps, np.maximum(cpu, 0.05), np.maximum(mem, 0.05)

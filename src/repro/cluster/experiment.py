@@ -1,0 +1,116 @@
+"""End-to-end scheduler comparison — reproduces Figs. 13-15.
+
+Runs identical pod-arrival traces under ICO / RR / HUP / LQP and reports
+online avg/p90/p99 response time plus cross-node CPU/MEM utilization
+standard deviation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import InterferenceQuantifier, ICOScheduler, SchedulerConfig
+from repro.core.baselines import RoundRobinScheduler, HUPScheduler, LQPScheduler
+from repro.core.predictors import RandomForestRegressor
+from repro.cluster import workloads as W
+from repro.cluster.dataset import generate_latency_dataset, _random_pod
+from repro.cluster.simulator import Cluster
+from repro.cluster.workloads import Pod
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    scheduler: str
+    avg_rt: float
+    p90_rt: float
+    p99_rt: float
+    cpu_util_std: float
+    mem_util_std: float
+    placed: int
+    rejected: int
+
+
+def train_default_predictor(seed: int = 0, num_placements: int = 250):
+    """Train the production Random Forest used by Eq. (3)."""
+    X, y = generate_latency_dataset(num_placements=num_placements, seed=seed)
+    return RandomForestRegressor(n_estimators=30, max_depth=10, seed=seed).fit(X, y)
+
+
+def make_schedulers(predictor, cfg: SchedulerConfig | None = None):
+    cfg = cfg or SchedulerConfig()
+    q = InterferenceQuantifier(predictor.predict)
+    return {
+        "ICO": ICOScheduler(q, cfg),
+        "RR": RoundRobinScheduler(cfg),
+        "HUP": HUPScheduler(q, cfg),
+        "LQP": LQPScheduler(cfg),
+    }
+
+
+def _arrival_trace(num_pods: int, seed: int):
+    """Pre-generate an identical pod sequence for every scheduler."""
+    rng = np.random.default_rng(seed)
+    pods, gaps = [], []
+    for _ in range(num_pods):
+        pods.append(_random_pod(rng))
+        gaps.append(int(rng.integers(5, 25)))  # ticks between submissions
+    return pods, gaps
+
+
+def run_experiment(
+    scheduler,
+    pods: list[Pod],
+    gaps: list[int],
+    num_nodes: int = 12,
+    seed: int = 7,
+    settle_ticks: int = 40,
+) -> ExperimentResult:
+    cluster = Cluster(num_nodes=num_nodes, seed=seed)
+    cluster.rollout(30)
+    rt_all: list[np.ndarray] = []
+    cpu_series, mem_series = [], []
+    placed = rejected = 0
+
+    for pod, gap in zip(pods, gaps):
+        pod = dataclasses.replace(pod)  # fresh copy per scheduler
+        data = cluster.nodes_data()
+        node = scheduler.select_node(pod, data)
+        if node < 0 or not cluster.place(pod, node):
+            rejected += 1
+        else:
+            placed += 1
+        cluster.rollout(gap)
+        rt_all.append(cluster.online_rt_samples())
+        cpu_series.append(cluster.last["cpu_util"])
+        mem_series.append(cluster.last["mem_util"])
+
+    cluster.rollout(settle_ticks)
+    rt_all.append(cluster.online_rt_samples())
+    rt = np.concatenate([r for r in rt_all if r.size])
+    cpu = np.stack(cpu_series)  # (T, N)
+    mem = np.stack(mem_series)
+    return ExperimentResult(
+        scheduler=scheduler.name,
+        avg_rt=float(rt.mean()),
+        p90_rt=float(np.percentile(rt, 90)),
+        p99_rt=float(np.percentile(rt, 99)),
+        cpu_util_std=float((100 * cpu).std(axis=1).mean()),
+        mem_util_std=float((100 * mem).std(axis=1).mean()),
+        placed=placed,
+        rejected=rejected,
+    )
+
+
+def compare_schedulers(
+    num_pods: int = 60,
+    num_nodes: int = 12,
+    seed: int = 7,
+    predictor=None,
+) -> dict[str, ExperimentResult]:
+    predictor = predictor or train_default_predictor(seed=seed)
+    pods, gaps = _arrival_trace(num_pods, seed)
+    out = {}
+    for name, sched in make_schedulers(predictor).items():
+        out[name] = run_experiment(sched, pods, gaps, num_nodes=num_nodes, seed=seed)
+    return out

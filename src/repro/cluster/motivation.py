@@ -1,0 +1,70 @@
+"""Motivation experiments — paper Section II (Figs. 1-4, Table I).
+
+Exp1: fix Web Search QPS (300), sweep the offline job's CPU cores 2..20.
+Exp2: fix offline cores (8), sweep Web Search QPS 200..2000.
+For each configuration, record (cpu_util, avg_runqlat, avg_response_time)
+and fit response time against each predictor; compare MAPE / R2.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import metric
+from repro.cluster.simulator import Cluster
+from repro.cluster.workloads import Pod, ONLINE_PROFILES, OFFLINE_PROFILES
+
+
+def _measure(qps: float, offline_cores: float, window: int = 120, seed: int = 0):
+    cluster = Cluster(num_nodes=1, seed=seed)
+    web = Pod("web_search", qps, True)
+    prof = ONLINE_PROFILES["web_search"]
+    web.cpu_demand = prof.cpu_per_qps * qps + prof.cpu_base
+    web.mem_demand = prof.mem_per_qps * qps + prof.mem_base
+    assert cluster.place(web, 0)
+    job = Pod("in_memory_analytics", 0.0, False, duration=10**6)
+    job.cpu_demand = offline_cores
+    job.mem_demand = offline_cores * OFFLINE_PROFILES["in_memory_analytics"].mem_per_core
+    assert cluster.place(job, 0)
+    s = cluster.rollout(window)
+    rt = cluster.online_rt_samples().mean()
+    runqlat = float(metric.avg_runqlat(s["hist_on"][0, 0]))
+    cpu = float(s["cpu_util"][0])
+    return cpu, runqlat, float(rt)
+
+
+def experiment1(seed: int = 0):
+    """Vary offline cores, QPS fixed at 300 (10 settings, as in the paper)."""
+    rows = [_measure(300.0, c, seed=seed + i) for i, c in enumerate(range(2, 22, 2))]
+    return np.asarray(rows)  # (10, 3): cpu, runqlat, rt
+
+
+def experiment2(seed: int = 100):
+    """Vary QPS 200..2000, offline cores fixed at 8."""
+    rows = [
+        _measure(float(q), 8.0, seed=seed + i)
+        for i, q in enumerate(range(200, 2200, 200))
+    ]
+    return np.asarray(rows)
+
+
+def fit_quality(x: np.ndarray, y: np.ndarray, degree: int = 2):
+    """Polynomial fit (as the paper 'attempted to fit a curve'); returns
+    (MAPE, R2)."""
+    coef = np.polyfit(x, y, degree)
+    pred = np.polyval(coef, x)
+    mape = float(np.mean(np.abs(pred - y) / np.maximum(np.abs(y), 1e-9)))
+    ss_res = float(((y - pred) ** 2).sum())
+    ss_tot = float(((y - y.mean()) ** 2).sum())
+    return mape, 1.0 - ss_res / max(ss_tot, 1e-12)
+
+
+def table1(seed: int = 0) -> dict[str, tuple[float, float]]:
+    """Reproduce Table I: curve-fit quality for runqlat-resp vs cpu-resp."""
+    e1 = experiment1(seed)
+    e2 = experiment2(seed + 100)
+    return {
+        "exp1_runqlat_resp": fit_quality(e1[:, 1], e1[:, 2]),
+        "exp1_cpu_resp": fit_quality(e1[:, 0], e1[:, 2]),
+        "exp2_runqlat_resp": fit_quality(e2[:, 1], e2[:, 2]),
+        "exp2_cpu_resp": fit_quality(e2[:, 0], e2[:, 2]),
+    }

@@ -1,0 +1,364 @@
+"""Discrete-time co-location cluster simulator (JAX-vectorized).
+
+Faithful to the paper's testbed: nodes with 32 cores / 64 GB RAM running a
+mix of online services (QPS-driven) and offline batch jobs.  Each 30s tick
+computes, for every node in one jit'd call:
+
+  * per-pod CPU demand (online: linear in instantaneous QPS; offline: the
+    allocated cores),
+  * run-queue pressure rho -> per-pod scheduling-latency (runqlat) samples
+    drawn from a gamma distribution whose mean follows an M/G/1-PS-style
+    delay curve (convex in rho, unbounded near saturation),
+  * online response times: RT = f(service) + rt_per_runqlat * runqlat
+    (queueing delay is the causal path — CPU utilization saturates at 1.0
+    and loses information, which is exactly the paper's motivation),
+  * Table-III telemetry: perf metrics, hardware events, runqlat histograms.
+
+The per-tick state transition is pure; rollout() scans W ticks in one call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metric
+from repro.cluster import workloads as W
+from repro.cluster.workloads import Pod
+
+S_ON = 8    # online slots per node
+S_OFF = 6   # offline slots per node
+SAMPLES_PER_TICK = 16
+TICKS_PER_DAY = 2880.0
+
+# contention model constants
+OS_BASE_CORES = 0.5
+RUNQLAT_BASE = 3.0          # latency units under no contention
+RUNQLAT_SCALE = 55.0        # scale of the delay curve
+RHO_EPS = 0.05
+GAMMA_SHAPE = 2.0
+
+
+@dataclasses.dataclass
+class NodeSpec:
+    cores: float = 32.0
+    mem_gb: float = 64.0
+
+
+def _season(t, phase):
+    return 1.0 + 0.35 * jnp.sin(2 * jnp.pi * t / TICKS_PER_DAY + phase) \
+               + 0.12 * jnp.sin(4 * jnp.pi * t / TICKS_PER_DAY + 1.7 * phase)
+
+
+@partial(jax.jit, static_argnames=("num_ticks",))
+def _rollout(state, profiles, t0, key, num_ticks: int):
+    """Scan num_ticks ticks. Returns (new_state, accumulated telemetry)."""
+
+    def tick(carry, inp):
+        st, _ = carry
+        t, key = inp
+        k_qps, k_lat, k_rt, k_hw = jax.random.split(key, 4)
+
+        on_active = st["on_active"]          # (N, S_ON) bool
+        on_type = st["on_type"]              # (N, S_ON) int32
+        on_qps_mean = st["on_qps_mean"]      # (N, S_ON)
+        on_phase = st["on_phase"]
+
+        qps_noise = 1.0 + 0.06 * jax.random.normal(k_qps, on_qps_mean.shape)
+        qps_t = on_qps_mean * _season(t, on_phase) * qps_noise
+        qps_t = jnp.where(on_active, jnp.maximum(qps_t, 0.0), 0.0)
+
+        cpu_on = jnp.where(
+            on_active,
+            profiles["cpu_per_qps"][on_type] * qps_t + profiles["cpu_base"][on_type],
+            0.0,
+        )
+        thr_on = jnp.where(on_active, profiles["threads_per_qps"][on_type] * qps_t, 0.0)
+        mem_on = jnp.where(
+            on_active,
+            profiles["mem_per_qps"][on_type] * qps_t + profiles["mem_base"][on_type],
+            0.0,
+        )
+
+        off_active = st["off_active"]        # (N, S_OFF)
+        cpu_off = jnp.where(off_active, st["off_cores"], 0.0)
+        thr_off = jnp.where(off_active, st["off_threads"], 0.0)
+        mem_off = jnp.where(off_active, st["off_mem"], 0.0)
+        burst_off = jnp.where(off_active, st["off_burst"], 0.0)
+
+        cores = st["cpu_sum"]                # (N,)
+        # measured CPU demand uses *average* usage; run-queue pressure uses
+        # *peak* (bursty) usage -- this information loss is exactly why
+        # utilization under-predicts interference (paper Section II).
+        total_cpu = cpu_on.sum(-1) + cpu_off.sum(-1) + OS_BASE_CORES
+        pressure_cpu = cpu_on.sum(-1) + (cpu_off * burst_off).sum(-1) + OS_BASE_CORES
+        rho = total_cpu / cores
+        rho_p = pressure_cpu / cores
+        threads_total = thr_on.sum(-1) + thr_off.sum(-1) + 2.0
+
+        # M/G/1-PS style delay curve: convex in rho, explodes near 1.0.
+        delay = RUNQLAT_BASE + RUNQLAT_SCALE * rho_p**2 / jnp.maximum(1.0 - rho_p, RHO_EPS)
+        # thread-count pressure adds a second contention path
+        delay = delay * (1.0 + 0.15 * jnp.maximum(threads_total / cores - 1.0, 0.0))
+        # tick-level lognormal jitter (scheduling is noisy)
+        delay = delay * jnp.exp(
+            0.13 * jax.random.normal(jax.random.fold_in(k_lat, 99), delay.shape)
+        )
+        delay = jnp.clip(delay, 0.0, 2.5 * metric.OVERFLOW_EDGE)
+
+        # per-pod runqlat samples (gamma, mean == node delay x pod jitter)
+        def pod_samples(key, active, n_slots):
+            jit_ = 1.0 + 0.18 * jax.random.normal(
+                jax.random.fold_in(key, 0), active.shape
+            )
+            mean = delay[:, None] * jnp.maximum(jit_, 0.3)
+            g = jax.random.gamma(
+                jax.random.fold_in(key, 1), GAMMA_SHAPE,
+                shape=(*active.shape, SAMPLES_PER_TICK),
+            )
+            samples = g * (mean[..., None] / GAMMA_SHAPE)
+            w = jnp.broadcast_to(active[..., None], samples.shape).astype(jnp.float32)
+            return samples, w, mean
+
+        s_on, w_on, mean_on = pod_samples(jax.random.fold_in(k_lat, 0), on_active, S_ON)
+        s_off, w_off, _ = pod_samples(jax.random.fold_in(k_lat, 1), off_active, S_OFF)
+        hist_on = metric.histogram(s_on, w_on)     # (N, S_ON, 200)
+        hist_off = metric.histogram(s_off, w_off)  # (N, S_OFF, 200)
+
+        # node-level measured telemetry
+        cpu_util = jnp.minimum(total_cpu, cores) / cores
+        mem_used = mem_on.sum(-1) + mem_off.sum(-1) + 2.0
+        mem_util = jnp.minimum(mem_used, st["mem_sum"]) / st["mem_sum"]
+        n_pods = on_active.sum(-1) + off_active.sum(-1)
+
+        # online response time: service term + queueing-delay term + a
+        # cache-contention term the runqlat metric does not capture
+        base_rt = profiles["base_rt"][on_type]
+        sat = jnp.maximum(qps_t / profiles["qps_cap"][on_type] - 0.8, 0.0)
+        cache_term = 0.06 * base_rt * jnp.minimum(mem_used / st["mem_sum"], 1.2)[:, None]
+        rt = base_rt * (1.0 + 1.5 * sat) \
+            + profiles["rt_per_runqlat"][on_type] * mean_on \
+            + cache_term \
+            + 0.06 * base_rt * jax.random.normal(k_rt, on_active.shape)
+        rt = jnp.where(on_active, jnp.maximum(rt, 0.5), 0.0)
+
+        # hardware events (per Table III), load-dependent with noise
+        hw_noise = 1.0 + 0.05 * jax.random.normal(k_hw, (cores.shape[0], 8))
+        used = jnp.minimum(total_cpu, cores)
+        instructions = used * 2.4e9
+        cache_pressure = jnp.minimum(mem_used / st["mem_sum"], 1.2) + 0.04 * n_pods
+        ipc = jnp.maximum(2.2 - 0.7 * jnp.minimum(rho, 1.3) - 0.3 * cache_pressure, 0.4)
+        cycles = instructions / ipc
+        cache_refs = instructions * 0.30
+        cache_misses = cache_refs * (0.02 + 0.08 * cache_pressure)
+        branch_ins = instructions * 0.18
+        branch_miss = branch_ins * (0.01 + 0.02 * jnp.minimum(rho, 1.5))
+        ctx_sw = threads_total * 120.0 * (1.0 + jnp.maximum(rho - 0.7, 0.0) * 3.0)
+        migrations = ctx_sw * 0.02
+        hw = jnp.stack(
+            [cycles, instructions, cache_refs, cache_misses,
+             branch_ins, branch_miss, ctx_sw, migrations], axis=-1
+        ) * hw_noise
+
+        # perf metrics (12 cols, Table III order)
+        qps_node = qps_t.sum(-1)
+        perf = jnp.stack(
+            [
+                cpu_util,
+                mem_util,
+                0.25 * mem_used,                     # mem_cache
+                1500.0 * total_cpu,                  # mem_pgfault
+                3.0 * mem_off.sum(-1),               # mem_pgmajfault
+                0.8 * mem_used,                      # working_set
+                0.7 * mem_used,                      # memory_rss
+                0.002 * qps_node,                    # net_recv_avg (MB/s)
+                1.2 * qps_node,                      # net_recv_packets_avg
+                0.008 * qps_node,                    # net_send_avg
+                1.1 * qps_node,                      # net_send_packets_avg
+                0.5 * cpu_off.sum(-1),               # disk_io_avg
+            ],
+            axis=-1,
+        )
+
+        out = {
+            "hist_on": hist_on,
+            "hist_off": hist_off,
+            "rt": rt,
+            "qps": qps_t,
+            "cpu_util": cpu_util,
+            "mem_util": mem_util,
+            "mem_used": mem_used,
+            "cpu_demand": total_cpu,
+            "hw": hw,
+            "perf": perf,
+            "delay": delay,
+            "mean_on": mean_on,
+        }
+
+        # age offline jobs
+        new_rem = jnp.where(off_active, st["off_remaining"] - 1, st["off_remaining"])
+        st = dict(st)
+        st["off_remaining"] = new_rem
+        st["off_active"] = off_active & (new_rem > 0)
+        return (st, None), out
+
+    keys = jax.random.split(key, num_ticks)
+    ts = t0 + jnp.arange(num_ticks, dtype=jnp.float32)
+    (state, _), outs = jax.lax.scan(tick, (state, None), (ts, keys))
+
+    summary = {
+        "hist_on": outs["hist_on"].sum(0),          # (N, S_ON, 200)
+        "hist_off": outs["hist_off"].sum(0),        # (N, S_OFF, 200)
+        "rt": outs["rt"],                           # (W, N, S_ON)
+        "qps": outs["qps"].mean(0),                 # (N, S_ON)
+        "cpu_util": outs["cpu_util"].mean(0),       # (N,)
+        "mem_util": outs["mem_util"].mean(0),
+        "mem_used": outs["mem_used"].mean(0),
+        "cpu_demand": outs["cpu_demand"].mean(0),
+        "hw": outs["hw"].mean(0),                   # (N, 8)
+        "perf": outs["perf"].mean(0),               # (N, 12)
+        "delay": outs["delay"].mean(0),             # (N,)
+        "mean_on": outs["mean_on"].mean(0),         # (N, S_ON)
+        "cpu_util_series": outs["cpu_util"],        # (W, N)
+        "mem_util_series": outs["mem_util"],
+    }
+    return state, summary
+
+
+class Cluster:
+    """Host-side cluster manager wrapping the jit'd rollout."""
+
+    def __init__(self, num_nodes: int = 12, spec: NodeSpec = NodeSpec(), seed: int = 0):
+        self.n = num_nodes
+        self.spec = spec
+        self.rng = np.random.default_rng(seed)
+        self.key = jax.random.PRNGKey(seed)
+        self.t = 0.0
+        self.profiles = {k: jnp.asarray(v) for k, v in W.online_arrays().items()}
+        self.state = {
+            "on_active": jnp.zeros((num_nodes, S_ON), bool),
+            "on_type": jnp.zeros((num_nodes, S_ON), jnp.int32),
+            "on_qps_mean": jnp.zeros((num_nodes, S_ON), jnp.float32),
+            "on_phase": jnp.zeros((num_nodes, S_ON), jnp.float32),
+            "off_active": jnp.zeros((num_nodes, S_OFF), bool),
+            "off_cores": jnp.zeros((num_nodes, S_OFF), jnp.float32),
+            "off_threads": jnp.zeros((num_nodes, S_OFF), jnp.float32),
+            "off_mem": jnp.zeros((num_nodes, S_OFF), jnp.float32),
+            "off_burst": jnp.ones((num_nodes, S_OFF), jnp.float32),
+            "off_remaining": jnp.zeros((num_nodes, S_OFF), jnp.int32),
+            "cpu_sum": jnp.full((num_nodes,), spec.cores, jnp.float32),
+            "mem_sum": jnp.full((num_nodes,), spec.mem_gb, jnp.float32),
+        }
+        self.last: dict | None = None
+        self._pod_slots: dict[int, tuple[str, int, int]] = {}  # uid -> (kind, node, slot)
+        self._uid = 0
+
+    # ---------------- placement ----------------
+
+    def _set(self, name, idx, value):
+        self.state[name] = self.state[name].at[idx].set(value)
+
+    def place(self, pod: Pod, node: int) -> bool:
+        """Place a pod on a node. Returns False if the node has no free slot."""
+        if node < 0 or node >= self.n:
+            return False
+        if pod.is_online:
+            free = np.nonzero(~np.asarray(self.state["on_active"][node]))[0]
+            if free.size == 0:
+                return False
+            s = int(free[0])
+            prof = W.ONLINE_PROFILES[pod.workload]
+            self._set("on_active", (node, s), True)
+            self._set("on_type", (node, s), prof.type_id)
+            self._set("on_qps_mean", (node, s), float(pod.qps))
+            self._set("on_phase", (node, s), float(self.rng.uniform(0, 2 * np.pi)))
+            kind = "on"
+        else:
+            free = np.nonzero(~np.asarray(self.state["off_active"][node]))[0]
+            if free.size == 0:
+                return False
+            s = int(free[0])
+            prof = W.OFFLINE_PROFILES[pod.workload]
+            cores = pod.cpu_demand
+            self._set("off_active", (node, s), True)
+            self._set("off_cores", (node, s), float(cores))
+            self._set("off_threads", (node, s), float(cores * prof.threads_per_core))
+            self._set("off_mem", (node, s), float(cores * prof.mem_per_core))
+            self._set("off_burst", (node, s), float(self.rng.uniform(*prof.burst_range)))
+            self._set("off_remaining", (node, s), int(pod.duration))
+            kind = "off"
+        pod.uid = self._uid
+        self._pod_slots[pod.uid] = (kind, node, s)
+        self._uid += 1
+        return True
+
+    def remove(self, uid: int) -> None:
+        kind, node, s = self._pod_slots.pop(uid)
+        self._set(f"{kind}_active", (node, s), False)
+
+    # ---------------- simulation ----------------
+
+    CHUNK = 10  # fixed scan length -> exactly one XLA compilation
+
+    def rollout(self, num_ticks: int) -> dict:
+        """Advance ~num_ticks ticks (rounded up to CHUNK multiples)."""
+        chunks = max(1, -(-num_ticks // self.CHUNK))
+        parts = []
+        for _ in range(chunks):
+            self.key, k = jax.random.split(self.key)
+            self.state, summary = _rollout(
+                self.state, self.profiles, jnp.float32(self.t), k, self.CHUNK
+            )
+            self.t += self.CHUNK
+            parts.append(summary)
+        if len(parts) == 1:
+            merged = parts[0]
+        else:
+            merged = {}
+            for key in parts[0]:
+                vals = [p[key] for p in parts]
+                if key in ("hist_on", "hist_off"):
+                    merged[key] = sum(vals[1:], vals[0])
+                elif key in ("rt", "cpu_util_series", "mem_util_series"):
+                    merged[key] = jnp.concatenate(vals, axis=0)
+                else:
+                    merged[key] = sum(vals[1:], vals[0]) / len(vals)
+        self.last = jax.tree.map(np.asarray, merged)
+        return self.last
+
+    # ---------------- Data Collection Module ----------------
+
+    def nodes_data(self) -> dict:
+        """Collector output consumed by every scheduler (paper Sec. IV-A)."""
+        if self.last is None:
+            self.rollout(30)
+        from repro.core.predictors.features import runqlat_summary
+
+        s = self.last
+        node_hist = s["hist_on"].sum(1) + s["hist_off"].sum(1)  # (N, 200)
+        summaries = np.stack([runqlat_summary(h) for h in node_hist])
+        features = np.concatenate([s["perf"], s["hw"], summaries], axis=1)
+        on_active = np.asarray(self.state["on_active"])
+        return {
+            "cpu_cur": s["cpu_demand"],
+            "cpu_sum": np.asarray(self.state["cpu_sum"]),
+            "mem_cur": s["mem_used"],
+            "mem_sum": np.asarray(self.state["mem_sum"]),
+            "online_hists": s["hist_on"],
+            "offline_hists": s["hist_off"],
+            "features": features,
+            "online_qps_sum": (s["qps"] * on_active).sum(-1),
+            "cpu_util": s["cpu_util"],
+            "mem_util": s["mem_util"],
+        }
+
+    def online_rt_samples(self) -> np.ndarray:
+        """Flat response-time samples of all active online pods, last window."""
+        s = self.last
+        active = np.asarray(self.state["on_active"])  # (N, S_ON)
+        rt = s["rt"]  # (W, N, S_ON)
+        mask = np.broadcast_to(active, rt.shape)
+        return rt[mask & (rt > 0)]

@@ -1,0 +1,49 @@
+"""Assigned architecture configs (+ the paper's cluster config).
+
+Each module exports CONFIG (full size, dry-run only) and smoke_config()
+(reduced same-family config for CPU tests).  get_config(name) resolves by
+arch id.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "rwkv6_7b",
+    "qwen3_moe_235b_a22b",
+    "dbrx_132b",
+    "qwen2_vl_72b",
+    "gemma3_4b",
+    "deepseek_coder_33b",
+    "internlm2_20b",
+    "smollm_135m",
+    "zamba2_1p2b",
+    "hubert_xlarge",
+]
+
+_ALIASES = {
+    "rwkv6-7b": "rwkv6_7b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "dbrx-132b": "dbrx_132b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "gemma3-4b": "gemma3_4b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "internlm2-20b": "internlm2_20b",
+    "smollm-135m": "smollm_135m",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "hubert-xlarge": "hubert_xlarge",
+}
+
+
+def canonical(name: str) -> str:
+    return _ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+
+
+def get_config(name: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.smoke_config()

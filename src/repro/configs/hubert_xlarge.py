@@ -1,0 +1,48 @@
+"""hubert-xlarge [audio] — encoder-only, w2v2-style backbone.
+48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504 (masked-unit targets)
+[arXiv:2106.07447; unverified]
+
+Backbone only (per the brief): the CNN waveform frontend is a stub —
+input_specs() provides precomputed frame embeddings (B, S, d_model).
+Bidirectional (non-causal) attention; no decode path (encoder-only).
+Training objective: masked-unit prediction over the 504 cluster targets.
+"""
+from repro.models.common import ModelConfig, LayerSpec
+
+_SPEC = LayerSpec("enc")
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab_size=504,
+    pattern=(_SPEC,),
+    repeats=48,
+    causal=False,
+    embed_inputs=True,
+)
+
+
+def smoke_config():
+    return ModelConfig(
+        name="hubert-smoke",
+        family="audio",
+        num_layers=3,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=64,
+        pattern=(_SPEC,),
+        repeats=3,
+        causal=False,
+        embed_inputs=True,
+        q_block=32,
+        kv_block=32,
+    )

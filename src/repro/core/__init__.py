@@ -1,0 +1,35 @@
+"""The paper's primary contribution: interference-aware co-located
+orchestration with the scheduling-latency (runqlat) metric.
+
+Modules:
+  metric          -- 200x5 runqlat histograms + Eq. (2) average
+  interference    -- Eq. (1) node / Eq. (3) pod interference quantification
+  predictors      -- 5 ML regressors for latency prediction (Table II)
+  resource_model  -- QPS -> (CPU, MEM) linear predictor (Figs. 6-7)
+  scheduler       -- ICO Algorithm 1 with Eq. (4)-(6) scoring
+  baselines       -- RR / HUP (Eq. 7) / LQP comparison schedulers
+"""
+from repro.core import metric
+from repro.core.interference import (
+    InterferenceQuantifier,
+    InterferenceWeights,
+    node_interference,
+    pod_interference,
+)
+from repro.core.resource_model import ResourcePredictor
+from repro.core.scheduler import ICOScheduler, SchedulerConfig
+from repro.core.baselines import RoundRobinScheduler, HUPScheduler, LQPScheduler
+
+__all__ = [
+    "metric",
+    "InterferenceQuantifier",
+    "InterferenceWeights",
+    "node_interference",
+    "pod_interference",
+    "ResourcePredictor",
+    "ICOScheduler",
+    "SchedulerConfig",
+    "RoundRobinScheduler",
+    "HUPScheduler",
+    "LQPScheduler",
+]

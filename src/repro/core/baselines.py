@@ -1,0 +1,81 @@
+"""Baseline schedulers from the paper's evaluation (Section V-D).
+
+RR  — Round Robin: cyclic assignment.
+HUP — High Utilization Priority (Eq. 7, derived from [26] with the paper's
+      modification): HUPscore_h = utiliz_cpu * utiliz_mem - intf_h - intf_p
+      (packs nodes tighter; interference-aware via the same intf terms).
+LQP — Low QPS Priority: pick the node with the lowest total online QPS.
+
+All baselines honor the same feasibility thresholds as ICO so comparisons
+isolate the scoring policy (the paper applies thresholds in Algorithm 1;
+without them HUP would immediately overload node 0).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.scheduler import SchedulerConfig
+
+
+def _projected_utilization(pod, nodes_data, cfg: SchedulerConfig):
+    cpu = (np.asarray(nodes_data["cpu_cur"]) + cfg.w_d * pod.cpu_demand) / np.asarray(
+        nodes_data["cpu_sum"]
+    )
+    mem = (np.asarray(nodes_data["mem_cur"]) + cfg.w_e * pod.mem_demand) / np.asarray(
+        nodes_data["mem_sum"]
+    )
+    feasible = (cpu <= cfg.cpu_threshold) & (mem <= cfg.mem_threshold)
+    return cpu, mem, feasible
+
+
+class RoundRobinScheduler:
+    name = "RR"
+
+    def __init__(self, config: SchedulerConfig | None = None):
+        self.cfg = config or SchedulerConfig()
+        self._next = 0
+
+    def select_node(self, pod, nodes_data) -> int:
+        n = len(np.asarray(nodes_data["cpu_cur"]))
+        _, _, feasible = _projected_utilization(pod, nodes_data, self.cfg)
+        for k in range(n):
+            idx = (self._next + k) % n
+            if feasible[idx]:
+                self._next = (idx + 1) % n
+                return int(idx)
+        return -1
+
+
+class HUPScheduler:
+    """High Utilization Priority — Eq. (7)."""
+
+    name = "HUP"
+
+    def __init__(self, quantifier, config: SchedulerConfig | None = None):
+        self.q = quantifier
+        self.cfg = config or SchedulerConfig()
+
+    def select_node(self, pod, nodes_data) -> int:
+        cpu, mem, feasible = _projected_utilization(pod, nodes_data, self.cfg)
+        intf_h = self.q.intf_nodes(nodes_data["online_hists"], nodes_data["offline_hists"])
+        intf_p = self.q.intf_pod(pod.qps, nodes_data["features"])
+        score = cpu * mem - intf_h - intf_p  # Eq. (7)
+        score = np.where(feasible, score, -np.inf)
+        best = int(np.argmax(score))
+        return best if np.isfinite(score[best]) else -1
+
+
+class LQPScheduler:
+    """Low QPS Priority — lowest total online QPS wins."""
+
+    name = "LQP"
+
+    def __init__(self, config: SchedulerConfig | None = None):
+        self.cfg = config or SchedulerConfig()
+
+    def select_node(self, pod, nodes_data) -> int:
+        _, _, feasible = _projected_utilization(pod, nodes_data, self.cfg)
+        qps = np.asarray(nodes_data["online_qps_sum"], np.float64)
+        qps = np.where(feasible, qps, np.inf)
+        best = int(np.argmin(qps))
+        return best if np.isfinite(qps[best]) else -1

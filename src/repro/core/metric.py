@@ -1,0 +1,122 @@
+"""Scheduling-latency (runqlat) metric — the paper's novel interference metric.
+
+The paper collects scheduling latency as a histogram of 200 bins, each 5
+latency-units wide: bin k counts occurrences in [k*5, k*5+5); bin 199 is the
+overflow bin (>= 995 units).  Eq. (2) defines the histogram-weighted average:
+
+    avg(runqlat) = ( sum_k runqlat_k * k * 5 ) / ( sum_k runqlat_k )
+
+We keep the unit abstract ("latency units"); the cluster simulator uses
+microseconds.  All functions are jit-compatible and vectorize over leading
+batch dimensions (e.g. nodes x services).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NUM_BINS = 200
+BIN_WIDTH = 5.0
+OVERFLOW_EDGE = BIN_WIDTH * (NUM_BINS - 1)  # 995: samples >= this land in bin 199
+
+
+def bin_edges() -> np.ndarray:
+    """Left edges of the 200 histogram bins."""
+    return np.arange(NUM_BINS) * BIN_WIDTH
+
+
+@jax.jit
+def histogram(samples: jax.Array, weights: jax.Array | None = None) -> jax.Array:
+    """Bin latency samples into the paper's 200x5 histogram.
+
+    samples: (..., S) float array of latencies (any unit).  Negative samples
+    are clamped to bin 0; samples >= 995 go to the overflow bin 199.
+    weights: optional (..., S) sample weights (e.g. zero to mask padding).
+    Returns (..., 200) float32 counts.
+    """
+    idx = jnp.clip(jnp.floor(samples / BIN_WIDTH), 0, NUM_BINS - 1).astype(jnp.int32)
+    one_hot = jax.nn.one_hot(idx, NUM_BINS, dtype=jnp.float32)
+    if weights is not None:
+        one_hot = one_hot * weights[..., None]
+    return one_hot.sum(axis=-2)
+
+
+@jax.jit
+def avg_runqlat(hist: jax.Array) -> jax.Array:
+    """Eq. (2): histogram-weighted average scheduling latency.
+
+    hist: (..., 200) counts.  Returns (...,) averages; empty histograms -> 0.
+    Follows the paper exactly: bin k contributes weight k*5 (the bin's left
+    edge), so bin 0 contributes 0 even when populated.
+    """
+    hist = hist.astype(jnp.float32)
+    k = jnp.arange(NUM_BINS, dtype=jnp.float32)
+    num = (hist * (k * BIN_WIDTH)).sum(axis=-1)
+    den = hist.sum(axis=-1)
+    return jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+
+
+@jax.jit
+def merge(*hists: jax.Array) -> jax.Array:
+    """Merge histograms (counts are additive)."""
+    out = hists[0]
+    for h in hists[1:]:
+        out = out + h
+    return out
+
+
+@jax.jit
+def percentile(hist: jax.Array, q: float) -> jax.Array:
+    """Approximate q-th percentile (0..100) from the histogram (left-edge rule)."""
+    hist = hist.astype(jnp.float32)
+    total = hist.sum(axis=-1, keepdims=True)
+    cdf = jnp.cumsum(hist, axis=-1) / jnp.maximum(total, 1e-12)
+    k = jnp.argmax(cdf >= (q / 100.0), axis=-1)
+    return k.astype(jnp.float32) * BIN_WIDTH
+
+
+@dataclasses.dataclass
+class RunqlatCollector:
+    """Streaming collector: accumulates samples into the 200-bin histogram.
+
+    This is the framework-side analogue of the paper's eBPF collector with
+    5-unit linear bins.  Used by the serving engine (request admission delay)
+    and the cluster simulator (per-pod scheduling latency).
+    """
+
+    hist: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(NUM_BINS, dtype=np.float64)
+    )
+    count: int = 0
+
+    def add(self, samples) -> None:
+        samples = np.asarray(samples, dtype=np.float64).ravel()
+        if samples.size == 0:
+            return
+        idx = np.clip((samples // BIN_WIDTH).astype(np.int64), 0, NUM_BINS - 1)
+        np.add.at(self.hist, idx, 1.0)
+        self.count += samples.size
+
+    def average(self) -> float:
+        return float(avg_runqlat(jnp.asarray(self.hist)))
+
+    def snapshot(self) -> np.ndarray:
+        return self.hist.copy()
+
+    def reset(self) -> None:
+        self.hist[:] = 0.0
+        self.count = 0
+
+
+@partial(jax.jit, static_argnames=("num_samples",))
+def sample_from_hist(hist: jax.Array, rng: jax.Array, num_samples: int) -> jax.Array:
+    """Draw latency samples consistent with a histogram (for simulation replay)."""
+    hist = hist.astype(jnp.float32)
+    probs = hist / jnp.maximum(hist.sum(), 1e-12)
+    bins = jax.random.categorical(rng, jnp.log(probs + 1e-20), shape=(num_samples,))
+    jitter = jax.random.uniform(jax.random.fold_in(rng, 1), (num_samples,)) * BIN_WIDTH
+    return bins.astype(jnp.float32) * BIN_WIDTH + jitter

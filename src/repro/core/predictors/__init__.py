@@ -1,0 +1,37 @@
+"""ML predictors for scheduling-latency prediction (paper Section IV-C).
+
+Five regressors, matching the paper's comparison (Table II):
+Linear Regression, Support Vector Machine (SVR), Multilayer Perceptron,
+Random Forest, and an XGBoost-style gradient-boosted ensemble.
+
+All share the ``fit(X, y) -> self`` / ``predict(X) -> np.ndarray`` API.
+Random Forest is the production model wired into Eq. (3).
+"""
+from repro.core.predictors.features import FEATURE_NAMES, feature_vector
+from repro.core.predictors.linear import LinearRegression
+from repro.core.predictors.svm import SVR
+from repro.core.predictors.mlp import MLPRegressor
+from repro.core.predictors.forest import RandomForestRegressor
+from repro.core.predictors.gbdt import XGBRegressor
+from repro.core.predictors.eval import evaluate, train_test_split
+
+ALL_MODELS = {
+    "linear_regression": LinearRegression,
+    "svm": SVR,
+    "mlp": MLPRegressor,
+    "random_forest": RandomForestRegressor,
+    "xgb": XGBRegressor,
+}
+
+__all__ = [
+    "FEATURE_NAMES",
+    "feature_vector",
+    "LinearRegression",
+    "SVR",
+    "MLPRegressor",
+    "RandomForestRegressor",
+    "XGBRegressor",
+    "ALL_MODELS",
+    "evaluate",
+    "train_test_split",
+]

@@ -1,0 +1,30 @@
+"""Linear Regression predictor (closed-form ridge, JAX)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class LinearRegression:
+    def __init__(self, reg: float = 1e-6):
+        self.reg = reg
+        self.w = None
+        self.mu = None
+        self.sigma = None
+        self.y_mu = 0.0
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "LinearRegression":
+        X = jnp.asarray(X, jnp.float32)
+        y = jnp.asarray(y, jnp.float32)
+        self.mu = X.mean(axis=0)
+        self.sigma = jnp.maximum(X.std(axis=0), 1e-9)
+        self.y_mu = y.mean()
+        Xs = (X - self.mu) / self.sigma
+        A = Xs.T @ Xs + self.reg * jnp.eye(Xs.shape[1], dtype=Xs.dtype)
+        b = Xs.T @ (y - self.y_mu)
+        self.w = jnp.linalg.solve(A, b)
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        Xs = (jnp.asarray(X, jnp.float32) - self.mu) / self.sigma
+        return np.asarray(Xs @ self.w + self.y_mu)

@@ -1,0 +1,90 @@
+"""Multilayer Perceptron regressor (pure JAX, Adam, minibatch SGD)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _init(key, sizes):
+    params = []
+    for i in range(len(sizes) - 1):
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (sizes[i], sizes[i + 1])) * jnp.sqrt(2.0 / sizes[i])
+        params.append({"w": w, "b": jnp.zeros(sizes[i + 1])})
+    return params
+
+
+def _apply(params, x):
+    for layer in params[:-1]:
+        x = jax.nn.relu(x @ layer["w"] + layer["b"])
+    last = params[-1]
+    return (x @ last["w"] + last["b"])[..., 0]
+
+
+@partial(jax.jit, static_argnames=("steps", "batch"))
+def _train(params, X, y, lr, steps, batch, key):
+    def loss_fn(p, xb, yb):
+        return jnp.mean((_apply(p, xb) - yb) ** 2)
+
+    def step(carry, _):
+        p, m, v, t, key = carry
+        key, k = jax.random.split(key)
+        idx = jax.random.randint(k, (batch,), 0, X.shape[0])
+        g = jax.grad(loss_fn)(p, X[idx], y[idx])
+        t = t + 1
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        mh = jax.tree.map(lambda a: a / (1 - 0.9**t), m)
+        vh = jax.tree.map(lambda a: a / (1 - 0.999**t), v)
+        p = jax.tree.map(lambda p_, m_, v_: p_ - lr * m_ / (jnp.sqrt(v_) + 1e-8), p, mh, vh)
+        return (p, m, v, t, key), None
+
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    (params, _, _, _, _), _ = jax.lax.scan(
+        step, (params, zeros, zeros, 0.0, key), None, length=steps
+    )
+    return params
+
+
+class MLPRegressor:
+    def __init__(
+        self,
+        hidden=(64, 64),
+        lr: float = 1e-3,
+        steps: int = 3000,
+        batch: int = 256,
+        seed: int = 0,
+    ):
+        self.hidden = tuple(hidden)
+        self.lr = lr
+        self.steps = steps
+        self.batch = batch
+        self.seed = seed
+        self.params = None
+        self.mu = None
+        self.sigma = None
+        self.y_mu = 0.0
+        self.y_sigma = 1.0
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "MLPRegressor":
+        X = jnp.asarray(X, jnp.float32)
+        y = jnp.asarray(y, jnp.float32)
+        self.mu = X.mean(axis=0)
+        self.sigma = jnp.maximum(X.std(axis=0), 1e-9)
+        self.y_mu = y.mean()
+        self.y_sigma = jnp.maximum(y.std(), 1e-9)
+        Xs = (X - self.mu) / self.sigma
+        ys = (y - self.y_mu) / self.y_sigma
+        key = jax.random.PRNGKey(self.seed)
+        params = _init(key, [X.shape[1], *self.hidden, 1])
+        self.params = _train(
+            params, Xs, ys, self.lr, self.steps, self.batch, jax.random.fold_in(key, 7)
+        )
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        Xs = (jnp.asarray(X, jnp.float32) - self.mu) / self.sigma
+        return np.asarray(_apply(self.params, Xs) * self.y_sigma + self.y_mu)

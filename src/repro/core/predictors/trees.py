@@ -1,0 +1,204 @@
+"""Shared decision-tree machinery for Random Forest and XGB-style boosting.
+
+Training: exact histogram-binned CART regression trees built host-side in
+numpy (tree induction is inherently sequential); quantile pre-binning (256
+bins) makes per-node split search O(n_features * n_bins) via cumulative sums.
+
+Inference: trees are flattened to arrays (feature, threshold, left, right,
+value) and traversed in JAX — vectorized over (trees x rows) with a bounded
+depth loop, so a whole forest predicts in one jit call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MAX_BINS = 256
+
+
+@dataclasses.dataclass
+class FlatTree:
+    feature: np.ndarray    # (n_nodes,) int32, -1 for leaf
+    threshold: np.ndarray  # (n_nodes,) float32
+    left: np.ndarray       # (n_nodes,) int32
+    right: np.ndarray      # (n_nodes,) int32
+    value: np.ndarray      # (n_nodes,) float32 (leaf prediction)
+
+
+def quantile_bins(X: np.ndarray, max_bins: int = MAX_BINS) -> np.ndarray:
+    """Per-feature quantile bin edges, shape (F, max_bins-1)."""
+    qs = np.linspace(0, 1, max_bins + 1)[1:-1]
+    return np.quantile(X, qs, axis=0).T.astype(np.float64)  # (F, max_bins-1)
+
+
+def bin_data(X: np.ndarray, edges: np.ndarray) -> np.ndarray:
+    """Map raw features to bin indices, shape (N, F) uint8/int16."""
+    out = np.empty(X.shape, dtype=np.int16)
+    for f in range(X.shape[1]):
+        out[:, f] = np.searchsorted(edges[f], X[:, f], side="right")
+    return out
+
+
+def _best_split(
+    binned: np.ndarray,
+    grad: np.ndarray,
+    hess: np.ndarray,
+    rows: np.ndarray,
+    feat_subset: np.ndarray,
+    n_bins: int,
+    reg_lambda: float,
+    min_child_weight: float,
+):
+    """Best (feature, bin) split by XGBoost gain over the given rows.
+
+    For plain CART (variance reduction) pass grad=residual targets, hess=1.
+    Returns (gain, feature, bin_idx) or (None) if no split improves.
+    """
+    g, h = grad[rows], hess[rows]
+    G, H = g.sum(), h.sum()
+    parent = (G * G) / (H + reg_lambda)
+    best_gain, best_feat, best_bin = 1e-12, -1, -1
+    sub = binned[rows][:, feat_subset]  # (n, F')
+    for j, f in enumerate(feat_subset):
+        gb = np.bincount(sub[:, j], weights=g, minlength=n_bins)
+        hb = np.bincount(sub[:, j], weights=h, minlength=n_bins)
+        gl = np.cumsum(gb)[:-1]
+        hl = np.cumsum(hb)[:-1]
+        gr, hr = G - gl, H - hl
+        valid = (hl >= min_child_weight) & (hr >= min_child_weight)
+        gain = np.where(
+            valid,
+            gl * gl / (hl + reg_lambda) + gr * gr / (hr + reg_lambda) - parent,
+            -np.inf,
+        )
+        k = int(np.argmax(gain))
+        if gain[k] > best_gain:
+            best_gain, best_feat, best_bin = float(gain[k]), int(f), k
+    if best_feat < 0:
+        return None
+    return best_gain, best_feat, best_bin
+
+
+def build_tree(
+    binned: np.ndarray,
+    edges: np.ndarray,
+    grad: np.ndarray,
+    hess: np.ndarray,
+    rows: np.ndarray,
+    *,
+    max_depth: int,
+    min_samples_leaf: int,
+    reg_lambda: float,
+    feature_frac: float,
+    rng: np.random.Generator,
+    leaf_scale: float = 1.0,
+) -> FlatTree:
+    """Grow one tree. Leaf value = -G/(H+lambda) * leaf_scale (XGB form;
+    with hess=1 and grad=-target this is the mean target, i.e. CART)."""
+    n_bins = edges.shape[1] + 1
+    n_feats = binned.shape[1]
+    feats = {"feature": [], "threshold": [], "left": [], "right": [], "value": []}
+
+    def new_node():
+        for k in feats:
+            feats[k].append(0)
+        return len(feats["feature"]) - 1
+
+    def grow(rows: np.ndarray, depth: int) -> int:
+        nid = new_node()
+        g, h = grad[rows], hess[rows]
+        G, H = g.sum(), h.sum()
+        leaf_val = float(-G / (H + reg_lambda) * leaf_scale)
+        split = None
+        if depth < max_depth and rows.size >= 2 * min_samples_leaf:
+            k = max(1, int(round(feature_frac * n_feats)))
+            feat_subset = rng.choice(n_feats, size=k, replace=False)
+            split = _best_split(
+                binned, grad, hess, rows, feat_subset, n_bins, reg_lambda,
+                min_child_weight=float(min_samples_leaf) * 1e-3,
+            )
+        if split is None:
+            feats["feature"][nid] = -1
+            feats["threshold"][nid] = 0.0
+            feats["left"][nid] = nid
+            feats["right"][nid] = nid
+            feats["value"][nid] = leaf_val
+            return nid
+        _, f, b = split
+        mask = binned[rows, f] <= b
+        l_rows, r_rows = rows[mask], rows[~mask]
+        if l_rows.size < min_samples_leaf or r_rows.size < min_samples_leaf:
+            feats["feature"][nid] = -1
+            feats["threshold"][nid] = 0.0
+            feats["left"][nid] = nid
+            feats["right"][nid] = nid
+            feats["value"][nid] = leaf_val
+            return nid
+        feats["feature"][nid] = f
+        feats["threshold"][nid] = float(edges[f][b]) if b < edges.shape[1] else np.inf
+        feats["value"][nid] = leaf_val
+        feats["left"][nid] = grow(l_rows, depth + 1)
+        feats["right"][nid] = grow(r_rows, depth + 1)
+        return nid
+
+    grow(rows, 0)
+    return FlatTree(
+        feature=np.asarray(feats["feature"], np.int32),
+        threshold=np.asarray(feats["threshold"], np.float32),
+        left=np.asarray(feats["left"], np.int32),
+        right=np.asarray(feats["right"], np.int32),
+        value=np.asarray(feats["value"], np.float32),
+    )
+
+
+def pad_forest(trees: list[FlatTree]):
+    """Stack trees into padded (T, n_nodes_max) arrays for JAX traversal."""
+    n = max(t.feature.size for t in trees)
+    T = len(trees)
+    feature = np.full((T, n), -1, np.int32)
+    threshold = np.zeros((T, n), np.float32)
+    left = np.zeros((T, n), np.int32)
+    right = np.zeros((T, n), np.int32)
+    value = np.zeros((T, n), np.float32)
+    for i, t in enumerate(trees):
+        m = t.feature.size
+        feature[i, :m] = t.feature
+        threshold[i, :m] = t.threshold
+        left[i, :m] = t.left
+        right[i, :m] = t.right
+        value[i, :m] = t.value
+    return dict(
+        feature=jnp.asarray(feature),
+        threshold=jnp.asarray(threshold),
+        left=jnp.asarray(left),
+        right=jnp.asarray(right),
+        value=jnp.asarray(value),
+    )
+
+
+@partial(jax.jit, static_argnames=("max_depth",))
+def forest_predict(forest: dict, X: jax.Array, max_depth: int) -> jax.Array:
+    """Predict (T, N) leaf values: bounded-depth traversal, fully vectorized."""
+    X = X.astype(jnp.float32)
+
+    def one_tree(feature, threshold, left, right, value):
+        def step(idx, _):
+            f = feature[idx]                       # (N,)
+            is_leaf = f < 0
+            xf = jnp.take_along_axis(X, jnp.maximum(f, 0)[:, None], axis=1)[:, 0]
+            go_left = xf <= threshold[idx]
+            nxt = jnp.where(go_left, left[idx], right[idx])
+            return jnp.where(is_leaf, idx, nxt), None
+
+        idx0 = jnp.zeros(X.shape[0], jnp.int32)
+        idx, _ = jax.lax.scan(step, idx0, None, length=max_depth + 1)
+        return value[idx]
+
+    return jax.vmap(one_tree)(
+        forest["feature"], forest["threshold"], forest["left"],
+        forest["right"], forest["value"],
+    )

@@ -1,0 +1,60 @@
+"""Resource Prediction Module (paper Section IV-B, Figs. 6-7).
+
+QPS -> (CPU cores, MEM GB) is near-linear per workload type, so the paper
+fits per-type linear regressions.  We keep one (slope, intercept) pair per
+resource per workload type, fitted with least squares in JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class LinearFit:
+    slope: float
+    intercept: float
+
+    def __call__(self, qps):
+        return self.slope * np.asarray(qps, np.float64) + self.intercept
+
+
+def fit_line(x: np.ndarray, y: np.ndarray) -> LinearFit:
+    x = jnp.asarray(x, jnp.float64)
+    y = jnp.asarray(y, jnp.float64)
+    xm, ym = x.mean(), y.mean()
+    cov = ((x - xm) * (y - ym)).mean()
+    var = jnp.maximum(((x - xm) ** 2).mean(), 1e-12)
+    slope = cov / var
+    return LinearFit(float(slope), float(ym - slope * xm))
+
+
+class ResourcePredictor:
+    """Predicts pod CPU/MEM demand from (workload_type, qps)."""
+
+    def __init__(self):
+        self.cpu_fits: dict[str, LinearFit] = {}
+        self.mem_fits: dict[str, LinearFit] = {}
+
+    def fit(self, workload_type: str, qps: np.ndarray, cpu: np.ndarray, mem: np.ndarray):
+        self.cpu_fits[workload_type] = fit_line(qps, cpu)
+        self.mem_fits[workload_type] = fit_line(qps, mem)
+        return self
+
+    def predict(self, workload_type: str, qps: float) -> tuple[float, float]:
+        """Returns (cpu_cores, mem_gb); clamped to be non-negative."""
+        cpu = float(self.cpu_fits[workload_type](qps))
+        mem = float(self.mem_fits[workload_type](qps))
+        return max(cpu, 0.0), max(mem, 0.0)
+
+    def r2(self, workload_type: str, qps, cpu, mem) -> tuple[float, float]:
+        """Goodness of fit, for reproducing Figs. 6-7."""
+        out = []
+        for fit, y in ((self.cpu_fits[workload_type], cpu), (self.mem_fits[workload_type], mem)):
+            pred = fit(qps)
+            ss_res = float(((pred - y) ** 2).sum())
+            ss_tot = float(((y - np.mean(y)) ** 2).sum())
+            out.append(1.0 - ss_res / max(ss_tot, 1e-12))
+        return out[0], out[1]

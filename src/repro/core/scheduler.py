@@ -1,0 +1,103 @@
+"""ICO scheduler — paper Algorithm 1 with scoring Eqs. (4)-(6).
+
+    score_h = (1 - utiliz_cpu_h) * (1 - utiliz_mem_h) - intf_h - intf_p      (4)
+    utiliz_cpu_h = (cpu_cur_h + w_d * cpu_pod) / cpu_sum_h                    (5)
+    utiliz_mem_h = (mem_cur_h + w_e * mem_pod) / mem_sum_h                    (6)
+
+Nodes whose projected utilization exceeds the thresholds (CPU > 0.70 or
+MEM > 0.80) are excluded.  The node with the highest score wins; -1 means
+no feasible node (caller queues the pod).
+
+The hot path (scoring all nodes for one pod) is a single jit'd call so the
+scheduler scales to thousands of nodes; Algorithm 1's loop becomes a masked
+argmax.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    cpu_threshold: float = 0.70
+    mem_threshold: float = 0.80
+    w_d: float = 1.2  # > 1 per paper (headroom on predicted pod CPU)
+    w_e: float = 1.2  # > 1 per paper (headroom on predicted pod MEM)
+
+    def __post_init__(self):
+        if not (self.w_d > 1.0 and self.w_e > 1.0):
+            raise ValueError("paper requires w_d, w_e > 1.0")
+
+
+@partial(jax.jit, static_argnames=())
+def _score_nodes(
+    cpu_cur, cpu_sum, mem_cur, mem_sum, intf_h, intf_p,
+    cpu_pod, mem_pod, w_d, w_e, cpu_thr, mem_thr,
+):
+    utiliz_cpu = (cpu_cur + w_d * cpu_pod) / cpu_sum      # Eq. (5)
+    utiliz_mem = (mem_cur + w_e * mem_pod) / mem_sum      # Eq. (6)
+    feasible = (utiliz_cpu <= cpu_thr) & (utiliz_mem <= mem_thr)
+    score = (1.0 - utiliz_cpu) * (1.0 - utiliz_mem) - intf_h - intf_p  # Eq. (4)
+    score = jnp.where(feasible, score, -jnp.inf)
+    best = jnp.argmax(score)
+    ok = jnp.isfinite(score[best])
+    return jnp.where(ok, best, -1), score
+
+
+class ICOScheduler:
+    """Interference-aware Container Orchestration scheduler (Algorithm 1)."""
+
+    name = "ICO"
+
+    def __init__(self, quantifier, config: SchedulerConfig | None = None):
+        self.q = quantifier
+        self.cfg = config or SchedulerConfig()
+
+    def select_node(self, pod, nodes_data: dict) -> int:
+        """Algorithm 1.
+
+        pod: object with .qps, .cpu_demand, .mem_demand (from the Resource
+             Prediction Module).
+        nodes_data: Data Collection Module output, dict of arrays keyed by:
+             cpu_cur, cpu_sum, mem_cur, mem_sum (shape (N,)),
+             online_hists (N, n_online_max, 200), offline_hists (N, n_off_max, 200),
+             features (N, F) Table-III node features (without leading QPS col).
+        Returns the selected node index or -1.
+        """
+        intf_h = self.q.intf_nodes(nodes_data["online_hists"], nodes_data["offline_hists"])
+        intf_p = self.q.intf_pod(pod.qps, nodes_data["features"])
+        best, _ = _score_nodes(
+            jnp.asarray(nodes_data["cpu_cur"], jnp.float32),
+            jnp.asarray(nodes_data["cpu_sum"], jnp.float32),
+            jnp.asarray(nodes_data["mem_cur"], jnp.float32),
+            jnp.asarray(nodes_data["mem_sum"], jnp.float32),
+            jnp.asarray(intf_h, jnp.float32),
+            jnp.asarray(intf_p, jnp.float32),
+            jnp.float32(pod.cpu_demand),
+            jnp.float32(pod.mem_demand),
+            self.cfg.w_d, self.cfg.w_e,
+            self.cfg.cpu_threshold, self.cfg.mem_threshold,
+        )
+        return int(best)
+
+    def scores(self, pod, nodes_data: dict) -> np.ndarray:
+        intf_h = self.q.intf_nodes(nodes_data["online_hists"], nodes_data["offline_hists"])
+        intf_p = self.q.intf_pod(pod.qps, nodes_data["features"])
+        _, score = _score_nodes(
+            jnp.asarray(nodes_data["cpu_cur"], jnp.float32),
+            jnp.asarray(nodes_data["cpu_sum"], jnp.float32),
+            jnp.asarray(nodes_data["mem_cur"], jnp.float32),
+            jnp.asarray(nodes_data["mem_sum"], jnp.float32),
+            jnp.asarray(intf_h, jnp.float32),
+            jnp.asarray(intf_p, jnp.float32),
+            jnp.float32(pod.cpu_demand),
+            jnp.float32(pod.mem_demand),
+            self.cfg.w_d, self.cfg.w_e,
+            self.cfg.cpu_threshold, self.cfg.mem_threshold,
+        )
+        return np.asarray(score)

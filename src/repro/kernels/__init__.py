@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  flash_attention  -- blocked online-softmax attention (causal / windowed)
+  rwkv_wkv         -- RWKV-6 WKV recurrence, VMEM-resident state
+  ssd              -- Mamba-2 SSD chunked scan
+  runqlat_hist     -- the paper's 200x5 runqlat histogram binning
+
+Each kernel has a pure-jnp oracle in ref.py and a jit wrapper in ops.py;
+tests sweep shapes/dtypes in interpret mode against the oracle.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

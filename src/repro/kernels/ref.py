@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+used by the per-kernel allclose sweeps in tests/)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metric
+
+
+def flash_attention_ref(q, k, v, causal=True, sliding_window=0):
+    """q/k/v: (B, S, H, hd) (equal head counts). Exact softmax attention."""
+    B, S, H, hd = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qi >= ki
+    if sliding_window > 0:
+        mask &= (ki > qi - sliding_window - 1) & (qi >= ki)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def wkv_ref(r, k, v, w, u, num_heads: int):
+    """Naive recurrent WKV-6. r/k/v/w: (B,T,H*P), u: (H,P)."""
+    B, T, HP = r.shape
+    H = num_heads
+    P = HP // H
+    rf = r.reshape(B, T, H, P).astype(jnp.float32)
+    kf = k.reshape(B, T, H, P).astype(jnp.float32)
+    vf = v.reshape(B, T, H, P).astype(jnp.float32)
+    wf = w.reshape(B, T, H, P).astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs
+        kv = jnp.einsum("bhp,bhq->bhpq", kt, vt)
+        y = jnp.einsum("bhp,bhpq->bhq", rt, S + uf[None, :, :, None] * kv)
+        return S * wt[..., None] + kv, y
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (rf, kf, vf, wf))
+    S0 = jnp.zeros((B, H, P, P), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3).reshape(B, T, HP).astype(r.dtype)
+
+
+def ssd_ref(x, dt, A, B_, C):
+    """Naive recurrent SSD. x: (B,T,H,P), dt: (B,T,H), A: (H,), B_/C: (B,T,N)."""
+    Bsz, T, H, P = x.shape
+    N = B_.shape[-1]
+
+    def step(S, xs):
+        xt, dtt, bt, ct = xs
+        a = jnp.exp(dtt * A[None])                       # (B,H)
+        S = S * a[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xt * dtt[..., None], bt)
+        y = jnp.einsum("bhpn,bn->bhp", S, ct)
+        return S, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          B_.transpose(1, 0, 2), C.transpose(1, 0, 2))
+    S0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)
+
+
+def runqlat_hist_ref(samples, weights=None):
+    """(S_series, N) latencies -> (S_series, 200) histograms."""
+    return metric.histogram(jnp.asarray(samples), weights)

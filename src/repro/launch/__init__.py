@@ -1,0 +1,2 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve entry
+points, and shape/applicability matrices."""

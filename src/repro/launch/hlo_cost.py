@@ -1,0 +1,300 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's compiled.cost_analysis() counts while-loop bodies ONCE (scan bodies,
+i.e. our transformer layers, are under-counted by the layer count), so we
+parse the post-optimization HLO text ourselves:
+
+  * module -> computations -> ops (result shapes tracked by op name)
+  * while ops multiply their body+condition cost by known_trip_count
+  * fusion/call recurse into the called computation
+  * dot FLOPs = 2 * prod(result shape) * prod(lhs contracting dims)
+  * other arithmetic ops: 1 FLOP per result element
+  * bytes = operand + result bytes of memory-real top-level ops
+    (parameters / GTE / tuple / bitcast are free)
+  * collective bytes tallied separately (with ring-algorithm traffic
+    factors), also trip-count-aware — this feeds the roofline collective
+    term.
+
+All numbers are PER DEVICE (the module is the SPMD-partitioned one).
+"""
+from __future__ import annotations
+
+import math
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1, "token": 0,
+    "opaque": 0,
+}
+
+_COLL_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+_FREE_OPS = {
+    "parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+    "custom-call",  # Sharding/annotation custom-calls; real ones re-added below
+}
+
+# ops whose operands/results genuinely cross HBM in a fused TPU lowering
+_MEM_OPS = {
+    "gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+    "concatenate", "copy", "sort", "pad", "reverse", "cholesky",
+    "triangular-solve", "rng", "rng-bit-generator",
+}
+
+_ARITH_1FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "compare", "select", "and", "or", "not", "xor", "convert", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "sign", "atan2",
+    "remainder", "clamp", "exponential-minus-one", "log-plus-one",
+    "logistic", "cbrt", "erf", "reduce", "map",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^()]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\("
+)
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n":"(\d+)"')
+_CALLS_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_info(frag: str):
+    """(bytes, elements) of a type fragment (may be a tuple)."""
+    total_b, total_e = 0, 0
+    for dtype, dims in _SHAPE_RE.findall(frag):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_b += n * _DTYPE_BYTES[dtype]
+        total_e += n
+    return total_b, total_e
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: dict[str, list[dict]] = {}
+        self.entry: str | None = None
+        self._parse(hlo_text)
+        self._memo: dict[str, dict] = {}
+
+    # ------------------------------------------------------------- parse --
+
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            s = line.strip()
+            if not s or s.startswith("//"):
+                continue
+            # computation header: `%name (args) -> type {` or `ENTRY %name ...{`
+            if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+                m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", s)
+                if m:
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                    if s.startswith("ENTRY"):
+                        self.entry = cur
+                continue
+            if s == "}":
+                continue
+            if cur is None:
+                continue
+            m = _DEF_RE.match(s)
+            if not m:
+                continue
+            name, type_frag, opcode = m.groups()
+            nbytes, nelem = _shape_info(type_frag)
+            mm = re.search(r'op_name="([^"]*)"', s)
+            op = {
+                "name": name,
+                "opcode": opcode,
+                "bytes": nbytes,
+                "elems": nelem,
+                "line": s,
+                "scope": mm.group(1) if mm else "",
+            }
+            self.computations[cur].append(op)
+
+    # -------------------------------------------------------------- cost --
+
+    def _result_shapes(self, comp: str) -> dict:
+        return {op["name"]: op for op in self.computations.get(comp, [])}
+
+    def cost(self, comp: str | None = None) -> dict:
+        comp = comp or self.entry
+        if comp in self._memo:
+            return self._memo[comp]
+        flops = 0.0
+        mem_bytes = 0.0
+        attn_bytes = 0.0   # bytes attributable to attention interiors
+        coll = {k: 0.0 for k in _COLL_FACTOR}
+        coll_count = {k: 0 for k in _COLL_FACTOR}
+        shapes = self._result_shapes(comp)
+
+        def is_attn(op):
+            return "flash_attention" in op["scope"]
+
+        for op in self.computations.get(comp, []):
+            oc = op["opcode"]
+            line = op["line"]
+            base = oc.removesuffix("-start")
+            if base in _COLL_FACTOR:
+                coll[base] += op["bytes"] * _COLL_FACTOR[base]
+                coll_count[base] += 1
+                mem_bytes += 2 * op["bytes"]
+                continue
+            if oc == "while":
+                trip = 1
+                mt = _TRIP_RE.search(line)
+                if mt:
+                    trip = int(mt.group(1))
+                body = _CALLS_RE.search(line)
+                cond = _COND_RE.search(line)
+                if body:
+                    sub = self.cost(body.group(1))
+                    flops += trip * sub["flops"]
+                    mem_bytes += trip * sub["bytes"]
+                    attn_bytes += trip * sub["attn_bytes"]
+                    for k in _COLL_FACTOR:
+                        coll[k] += trip * sub["coll"][k]
+                        coll_count[k] += trip * sub["coll_count"][k]
+                if cond and cond.group(1) in self.computations:
+                    sub = self.cost(cond.group(1))
+                    flops += trip * sub["flops"]
+                continue
+            if oc in ("fusion", "call", "async-start"):
+                called = _CALLS_RE.search(line)
+                if called and called.group(1) in self.computations:
+                    sub = self.cost(called.group(1))
+                    flops += sub["flops"]
+                    attn_bytes += sub["attn_bytes"]
+                    for k in _COLL_FACTOR:
+                        coll[k] += sub["coll"][k]
+                        coll_count[k] += sub["coll_count"][k]
+                    # fusion HBM traffic = its operands + result (not
+                    # internal intermediates).  Operands that the fusion
+                    # internally dynamic-slices (the scan-over-layers
+                    # residual stacks) are charged at a cap of
+                    # 8x output + 64MB, not their full stacked size.
+                    cap = 8 * op["bytes"] + 64e6
+                    b = op["bytes"] + self._operand_bytes(line, shapes, cap=cap)
+                    mem_bytes += b
+                    if is_attn(op):
+                        attn_bytes += b
+                continue
+            if oc == "conditional":
+                branches = re.findall(r"(?:branch_computations=\{([^}]*)\}|true_computation=%?([\w\.\-]+), false_computation=%?([\w\.\-]+))", line)
+                names = []
+                for tup in branches:
+                    for t in tup:
+                        if t:
+                            names += [x.strip().strip("%") for x in t.split(",")]
+                subcosts = [self.cost(n) for n in names if n in self.computations]
+                if subcosts:
+                    best = max(subcosts, key=lambda c: c["flops"])
+                    flops += best["flops"]
+                    mem_bytes += best["bytes"]
+                continue
+            if oc == "dot":
+                flops += self._dot_flops(line, op, shapes)
+                b = op["bytes"] + self._operand_bytes(line, shapes)
+                mem_bytes += b
+                if is_attn(op):
+                    attn_bytes += b
+                continue
+            if oc in _FREE_OPS:
+                # real custom-calls (TopK / sort) still move memory
+                if oc == "custom-call" and "Sharding" not in line:
+                    mem_bytes += op["bytes"] + self._operand_bytes(line, shapes)
+                continue
+            # everything else: elementwise-ish compute; memory traffic is
+            # only charged to ops a TPU lowering would NOT fuse away
+            # (CPU-backend HLO is less fused than TPU — charging every
+            # top-level elementwise op would overstate HBM bytes ~5x).
+            if oc in _ARITH_1FLOP:
+                flops += op["elems"]
+            if oc in _MEM_OPS:
+                b = op["bytes"] + self._operand_bytes(line, shapes)
+                mem_bytes += b
+                if is_attn(op):
+                    attn_bytes += b
+
+        out = {
+            "flops": flops,
+            "bytes": mem_bytes,
+            "attn_bytes": attn_bytes,
+            "coll": coll,
+            "coll_count": coll_count,
+            "coll_bytes": sum(coll.values()),
+        }
+        self._memo[comp] = out
+        return out
+
+    def _operand_bytes(self, line: str, shapes: dict, cap: float | None = None) -> float:
+        # operands: %name refs inside the (...) call args
+        args = line.split("(", 1)[1]
+        total = 0.0
+        seen = set()
+        for name in _OPERAND_RE.findall(args):
+            if name in seen:
+                continue
+            seen.add(name)
+            if name in shapes:
+                b = shapes[name]["bytes"]
+                if cap is not None:
+                    b = min(b, cap)
+                total += b
+        return total
+
+    def _dot_flops(self, line: str, op: dict, shapes: dict) -> float:
+        args = line.split("(", 1)[1]
+        names = _OPERAND_RE.findall(args)
+        lhs = shapes.get(names[0]) if names else None
+        # contracting dims of lhs
+        mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        if lhs is None or mc is None:
+            # inline-shape operand fallback
+            inline = _SHAPE_RE.findall(args)
+            if inline and mc is not None:
+                dims = [int(d) for d in inline[0][1].split(",") if d]
+                cdims = [int(x) for x in mc.group(1).split(",") if x]
+                k = math.prod(dims[c] for c in cdims) if cdims else 1
+                return 2.0 * op["elems"] * k
+            return 2.0 * op["elems"]  # last resort
+        mshape = _SHAPE_RE.search(shapes[names[0]]["line"].split("=", 1)[1])
+        dims = [int(d) for d in mshape.group(2).split(",") if d] if mshape else []
+        cdims = [int(x) for x in mc.group(1).split(",") if x]
+        k = math.prod(dims[c] for c in cdims) if (dims and cdims) else 1
+        return 2.0 * op["elems"] * k
+
+
+def module_cost(hlo_text: str) -> dict:
+    model = HloCostModel(hlo_text)
+    c = model.cost()
+    return {
+        "flops": c["flops"],
+        "bytes": c["bytes"],
+        "attn_bytes": c["attn_bytes"],
+        "coll_bytes": c["coll_bytes"],
+        "coll_breakdown": c["coll"],
+        "coll_counts": c["coll_count"],
+    }

@@ -1,0 +1,86 @@
+"""Assigned input shapes x applicability matrix.
+
+  train_4k     seq=4,096   global_batch=256   (training: train_step)
+  prefill_32k  seq=32,768  global_batch=32    (inference prefill)
+  decode_32k   seq=32,768  global_batch=128   (decode: 1 token, 32k KV cache)
+  long_500k    seq=524,288 global_batch=1     (long-context decode)
+
+Skips (documented in DESIGN.md §Arch-applicability):
+  * long_500k only for sub-quadratic archs (rwkv6, zamba2, gemma3-local).
+  * encoder-only (hubert) has no decode step -> skip decode_32k/long_500k.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524_288, 1, "decode"),
+}
+
+# archs with sub-quadratic sequence mixing (eligible for long_500k)
+SUBQUADRATIC = {"rwkv6-7b", "zamba2-1.2b", "gemma3-4b"}
+ENCODER_ONLY = {"hubert-xlarge"}
+
+
+def applicable(arch_name: str, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and arch_name not in SUBQUADRATIC:
+        return False, "full-attention arch: long_500k skipped (quadratic)"
+    if arch_name in ENCODER_ONLY and SHAPES[shape_name].kind == "decode":
+        return False, "encoder-only arch: no decode step"
+    return True, ""
+
+
+def all_cells():
+    """Every runnable (arch, shape) pair."""
+    from repro.configs import ARCHS, get_config
+
+    cells = []
+    for a in ARCHS:
+        cfg = get_config(a)
+        for s in SHAPES:
+            ok, _ = applicable(cfg.name, s)
+            if ok:
+                cells.append((a, s))
+    return cells
+
+
+def input_specs(cfg, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation)."""
+    sc = SHAPES[shape_name]
+    B, S = sc.global_batch, sc.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    if sc.kind in ("train", "prefill"):
+        batch = {}
+        if cfg.embed_inputs:
+            batch["embeds"] = SDS((B, S, cfg.d_model), f32)
+            if cfg.mrope_sections:
+                batch["positions"] = SDS((3, B, S), i32)
+        else:
+            batch["tokens"] = SDS((B, S), i32)
+        if sc.kind == "train":
+            batch["labels"] = SDS((B, S), i32)
+            batch["mask"] = SDS((B, S), f32)
+        return {"batch": batch}
+    # decode: one new token against a seq_len cache
+    if cfg.embed_inputs:
+        tok = {"embeds": SDS((B, 1, cfg.d_model), f32)}
+    else:
+        tok = {"token": SDS((B, 1), i32)}
+    return {"batch": tok, "cache_len": S}

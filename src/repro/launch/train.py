@@ -1,0 +1,122 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --steps 200 --batch 8 --seq 128 [--smoke] [--ckpt-dir /tmp/ckpt] \
+      [--accum 2] [--compress] [--resume]
+
+On this CPU container use --smoke (reduced config).  The launcher wires
+together: config resolution, data pipeline (prefetched), train step
+(accum/remat/compression), checkpointing with auto-resume, straggler
+detection, and — when a cluster manager is provided — ICO placement of the
+job as an *offline pod* (see repro.cluster / examples/colocation_sim.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import SyntheticLM, Prefetcher
+from repro.optim import AdamWConfig
+from repro.train import (
+    Checkpointer,
+    StragglerDetector,
+    make_train_step,
+    init_train_state,
+)
+
+
+def train_loop(
+    cfg,
+    *,
+    steps: int,
+    global_batch: int,
+    seq_len: int,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 50,
+    accum: int = 1,
+    compress: bool = False,
+    resume: bool = False,
+    lr: float = 3e-4,
+    log_every: int = 10,
+    seed: int = 0,
+):
+    params, opt = init_train_state(cfg, jax.random.PRNGKey(seed), compress=compress)
+    ck = Checkpointer(ckpt_dir) if ckpt_dir else None
+    start = 0
+    if ck and resume:
+        restored, step = ck.restore({"params": params, "opt": opt})
+        if restored is not None:
+            params, opt = restored["params"], restored["opt"]
+            start = step
+            print(f"[train] resumed from step {step}")
+
+    step_fn = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=lr), accum=accum, compress=compress,
+        schedule_kwargs={"warmup": max(10, steps // 20), "total": steps},
+    ))
+    ds = SyntheticLM(
+        cfg.vocab_size, seq_len, global_batch, seed=seed,
+        embed_dim=cfg.d_model if cfg.embed_inputs else 0,
+        mrope=bool(cfg.mrope_sections),
+    )
+    pf = Prefetcher(ds, start_step=start)
+    straggler = StragglerDetector()
+    losses = []
+    try:
+        for s in range(start, steps):
+            t0 = time.time()
+            batch = {k: jnp.asarray(v) for k, v in pf.next().items()}
+            params, opt, m = step_fn(params, opt, batch)
+            loss = float(m["loss"])  # forces the async step to finish
+            dur = time.time() - t0
+            verdict = straggler.observe(dur)
+            losses.append(loss)
+            if s % log_every == 0 or s == steps - 1:
+                print(f"[train] step={s} loss={float(m['loss']):.4f} "
+                      f"gnorm={float(m['grad_norm']):.3f} {dur * 1e3:.0f}ms"
+                      + (" STRAGGLER" if verdict["straggler"] else ""))
+            if ck and (s + 1) % ckpt_every == 0:
+                ck.save(s + 1, {"params": params, "opt": opt}, async_=True)
+        if ck:
+            ck.save(steps, {"params": params, "opt": opt})
+            ck.wait()
+    finally:
+        pf.close()
+    return params, opt, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-runnable)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    print(f"[train] arch={cfg.name} layers={cfg.num_layers} d={cfg.d_model}")
+    _, _, losses = train_loop(
+        cfg, steps=args.steps, global_batch=args.batch, seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        accum=args.accum, compress=args.compress, resume=args.resume,
+        lr=args.lr,
+    )
+    k = max(1, len(losses) // 10)
+    print(f"[train] first-{k} loss={sum(losses[:k]) / k:.4f} "
+          f"last-{k} loss={sum(losses[-k:]) / k:.4f}")
+
+
+if __name__ == "__main__":
+    main()

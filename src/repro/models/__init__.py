@@ -1,0 +1,1 @@
+"""Composable pure-JAX model definitions for the 10 assigned architectures."""

@@ -1,0 +1,388 @@
+"""Attention: RoPE/M-RoPE, memory-bounded jnp flash attention (the dry-run
+lowering path; `use_pallas=True` swaps in the Pallas kernel on TPU), sliding
+window attention, and single-token decode attention over (possibly
+sequence-sharded) KV caches.
+
+Causal attention comes in two flavors:
+  * naive: scan over KV blocks with masking -- computes the full S^2 block
+    grid (2x the causal FLOPs).  This is the paper-faithful baseline in
+    EXPERIMENTS.md #Perf.
+  * recursive ("causal_block_skip"): divide-and-conquer decomposition
+      causal(S) = [causal(S/2) | full(lower-left S/2 x S/2) + causal(S/2)]
+    which lowers exactly the S^2/2 useful FLOPs with O(log S) HLO depth.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- RoPE ---
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope_sections: tuple = ()) -> jax.Array:
+    """x: (B, S, H, hd). positions: (B, S) or (3, B, S) for M-RoPE."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    if mrope_sections:
+        # M-RoPE (Qwen2-VL): frequency channels are split into (t, h, w)
+        # sections, each rotated by its own position stream.
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        sec = jnp.concatenate([
+            jnp.full((n,), i, jnp.int32) for i, n in enumerate(mrope_sections)
+        ])  # (hd/2,) section id per freq channel
+        pos_c = positions[sec]                      # (hd/2, B, S)
+        angles = jnp.einsum("cbs,c->bsc", pos_c.astype(jnp.float32), inv)
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * inv  # (B, S, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------- flash building blocks ---
+
+def _repeat_kv(k: jax.Array, q_per_kv: int) -> jax.Array:
+    """(B, S, KV, hd) -> (B, S, KV*G, hd) by head repetition (GQA)."""
+    if q_per_kv == 1:
+        return k
+    return jnp.repeat(k, q_per_kv, axis=2)
+
+
+def _flash_scan(q, k, v, kv_block: int, mask_fn=None, q_offset=0):
+    """Online-softmax scan over KV blocks.
+
+    q: (B, Sq, H, hd); k/v: (B, Sk, H, hd) (kv heads already repeated).
+    mask_fn(q_idx (Sq,), k_idx (kb,)) -> (Sq, kb) bool "attend" mask.
+    Returns (B, Sq, H, hd); softmax accumulators in f32.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    nkb = max(1, Sk // kv_block)
+    kb = Sk // nkb
+    assert kb * nkb == Sk, f"Sk={Sk} not divisible by kv_block={kv_block}"
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    kr = k.reshape(B, nkb, kb, H, hd).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(B, nkb, kb, H, hd).transpose(1, 0, 2, 3, 4)
+    q_idx = q_offset + jnp.arange(Sq)
+
+    def step(carry, blk):
+        acc, m, l = carry
+        kj, vj, j = blk
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kj.astype(jnp.float32))
+        s = s * scale
+        if mask_fn is not None:
+            k_idx = j * kb + jnp.arange(kb)
+            mask = mask_fn(q_idx, k_idx)  # (Sq, kb)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhqk,bkhd->bqhd", p, vj.astype(jnp.float32))
+        acc_new = acc * alpha.transpose(0, 2, 1)[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc0, m0, l0), (kr, vr, jnp.arange(nkb))
+    )
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype), m, l
+
+
+def _merge_partial(o1, m1, l1, o2, m2, l2):
+    """Merge two online-softmax partial results over the same queries."""
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    l = l1 * a1 + l2 * a2
+    w1 = (l1 * a1 / jnp.maximum(l, 1e-30)).transpose(0, 2, 1)[..., None]
+    w2 = (l2 * a2 / jnp.maximum(l, 1e-30)).transpose(0, 2, 1)[..., None]
+    o = o1.astype(jnp.float32) * w1 + o2.astype(jnp.float32) * w2
+    return o, m, l
+
+
+# ----------------------------------------------- custom-vjp flash (train) --
+#
+# lax.scan under autodiff stacks per-step residuals (the full S^2 score
+# blocks!) — measured 340 GB/layer of HBM traffic on the 16x16 dry-run.
+# This custom_vjp recomputes scores in the backward pass (FlashAttention-2
+# schedule): nothing bigger than one (Sq_chunk x kv_block) score tile is
+# ever live, and causality is exploited by giving each static q-chunk a
+# kv-scan that stops at its causal frontier (triangle FLOPs, not square).
+
+N_Q_CHUNKS = 8
+
+
+def _chunk_ends(S, n_chunks, causal):
+    C = S // n_chunks
+    return [((i + 1) * C if causal else S) for i in range(n_chunks)]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_mha(q, k, v, causal: bool, kv_block: int, n_chunks: int):
+    out, _, _ = _flash_fwd_impl(q, k, v, causal, kv_block, n_chunks)
+    return out
+
+
+def _pick_chunks(S, kv_block, n_chunks):
+    n = min(n_chunks, max(1, S // kv_block))
+    while n > 1 and S % n:
+        n -= 1
+    return n
+
+
+def _flash_fwd_impl(q, k, v, causal, kv_block, n_chunks):
+    with jax.named_scope("flash_attention_fwd"):
+        return _flash_fwd_scoped(q, k, v, causal, kv_block, n_chunks)
+
+
+def _flash_fwd_scoped(q, k, v, causal, kv_block, n_chunks):
+    B, S, H, hd = q.shape
+    n_chunks = _pick_chunks(S, kv_block, n_chunks)
+    C = S // n_chunks
+    outs, ms, ls = [], [], []
+    for i, end in enumerate(_chunk_ends(S, n_chunks, causal)):
+        qi = q[:, i * C:(i + 1) * C]
+        mask_fn = None
+        if causal:
+            off = i * C
+            def mask_fn(q_idx, k_idx, _off=off):
+                return (_off + q_idx)[:, None] >= k_idx[None, :]
+        o, m, l = _flash_scan(qi, k[:, :end], v[:, :end],
+                              min(kv_block, end), mask_fn)
+        outs.append(o)
+        ms.append(m)
+        ls.append(l)
+    return (jnp.concatenate(outs, axis=1),
+            jnp.concatenate(ms, axis=-1),
+            jnp.concatenate(ls, axis=-1))
+
+
+def _flash_fwd(q, k, v, causal, kv_block, n_chunks):
+    out, m, l = _flash_fwd_impl(q, k, v, causal, kv_block, n_chunks)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_bwd(causal, kv_block, n_chunks, res, dout):
+    with jax.named_scope("flash_attention_bwd"):
+        return _flash_bwd_scoped(causal, kv_block, n_chunks, res, dout)
+
+
+def _flash_bwd_scoped(causal, kv_block, n_chunks, res, dout):
+    q, k, v, out, m, l = res
+    B, S, H, hd = q.shape
+    n_chunks = _pick_chunks(S, kv_block, n_chunks)
+    C = S // n_chunks
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    douf = dout.astype(jnp.float32)
+    D = (douf * out.astype(jnp.float32)).sum(-1)          # (B, S, H)
+    dq = jnp.zeros((B, S, H, hd), jnp.float32)
+    dk = jnp.zeros((B, S, H, hd), jnp.float32)
+    dv = jnp.zeros((B, S, H, hd), jnp.float32)
+
+    for i, end in enumerate(_chunk_ends(S, n_chunks, causal)):
+        sl = slice(i * C, (i + 1) * C)
+        qi = q[:, sl].astype(jnp.float32)
+        mi = m[..., sl.start:sl.stop]                      # (B, H, C)
+        li = jnp.maximum(l[..., sl.start:sl.stop], 1e-30)
+        doi = douf[:, sl]
+        Di = D[:, sl]                                      # (B, C, H)
+        kb = min(kv_block, end)
+        nkb = end // kb
+        kr = k[:, :end].reshape(B, nkb, kb, H, hd).transpose(1, 0, 2, 3, 4)
+        vr = v[:, :end].reshape(B, nkb, kb, H, hd).transpose(1, 0, 2, 3, 4)
+        off = i * C
+        q_idx = off + jnp.arange(C)
+
+        def step(dq_acc, blk):
+            kj, vj, j = blk
+            kjf, vjf = kj.astype(jnp.float32), vj.astype(jnp.float32)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi, kjf) * scale
+            if causal:
+                k_idx = j * kb + jnp.arange(kb)
+                s = jnp.where((q_idx[:, None] >= k_idx[None, :])[None, None],
+                              s, NEG_INF)
+            p = jnp.exp(s - mi[..., None]) / li[..., None]     # (B,H,C,kb)
+            dv_j = jnp.einsum("bhqk,bqhd->bkhd", p, doi)
+            dp = jnp.einsum("bqhd,bkhd->bhqk", doi, vjf)
+            ds = p * (dp - Di.transpose(0, 2, 1)[..., None])   # (B,H,C,kb)
+            dq_acc = dq_acc + jnp.einsum("bhqk,bkhd->bqhd", ds, kjf) * scale
+            dk_j = jnp.einsum("bhqk,bqhd->bkhd", ds, qi) * scale
+            return dq_acc, (dk_j, dv_j)
+
+        dq_i, (dk_s, dv_s) = jax.lax.scan(
+            step, jnp.zeros((B, C, H, hd), jnp.float32),
+            (kr, vr, jnp.arange(nkb)),
+        )
+        dq = dq.at[:, sl].set(dq_i)
+        dk_flat = dk_s.transpose(1, 0, 2, 3, 4).reshape(B, end, H, hd)
+        dv_flat = dv_s.transpose(1, 0, 2, 3, 4).reshape(B, end, H, hd)
+        dk = dk.at[:, :end].add(dk_flat)
+        dv = dv.at[:, :end].add(dv_flat)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_mha.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ------------------------------------------------------- causal variants ---
+
+def _causal_naive(q, k, v, kv_block):
+    def mask_fn(qi, ki):
+        return qi[:, None] >= ki[None, :]
+    out, _, _ = _flash_scan(q, k, v, kv_block, mask_fn)
+    return out
+
+
+def _causal_recursive(q, k, v, kv_block):
+    """Divide-and-conquer causal attention: exactly S^2/2 + diag FLOPs.
+
+    Diagonal blocks are always q/k-aligned, so local index comparison
+    implements the causal mask at every recursion level.
+    """
+    S = q.shape[1]
+    if S <= kv_block:
+        def mask_fn(qi, ki):
+            return qi[:, None] >= ki[None, :]
+        return _flash_scan(q, k, v, S, mask_fn)
+    half = S // 2
+    q1, q2 = q[:, :half], q[:, half:]
+    k1, k2 = k[:, :half], k[:, half:]
+    v1, v2 = v[:, :half], v[:, half:]
+    o1, m1, l1 = _causal_recursive(q1, k1, v1, kv_block)
+    # lower-left quadrant: q2 attends all of k1, no mask -> dense flash
+    of, mf, lf = _flash_scan(q2, k1, v1, kv_block, None)
+    od, md, ld = _causal_recursive(q2, k2, v2, kv_block)
+    o2_out, m2, l2 = _merge_partial(
+        of.astype(jnp.float32), mf, lf, od.astype(jnp.float32), md, ld
+    )
+    out = jnp.concatenate([o1.astype(q.dtype), o2_out.astype(q.dtype)], axis=1)
+    m = jnp.concatenate([m1, m2], axis=-1)
+    l = jnp.concatenate([l1, l2], axis=-1)
+    return out, m, l
+
+
+# ------------------------------------------------------- sliding window ----
+
+def _sliding_window(q, k, v, window: int, q_block: int):
+    """Local attention: each query attends the previous `window` keys.
+
+    Gathers, per q block, the KV slab [blk_end - window - q_block, blk_end)
+    -> O(S * (window + q_block)) compute and memory.
+    """
+    with jax.named_scope("flash_attention_window"):
+        return _sliding_window_scoped(q, k, v, window, q_block)
+
+
+def _sliding_window_scoped(q, k, v, window, q_block):
+    B, S, H, hd = q.shape
+    qb = min(q_block, S)
+    while S % qb:  # largest block size that tiles S
+        qb -= 1
+    nqb = S // qb
+    slab = window + qb
+    starts = jnp.arange(nqb) * qb + qb - slab  # may be negative
+    idx = starts[:, None] + jnp.arange(slab)[None, :]  # (nqb, slab)
+    valid = idx >= 0
+    idx_c = jnp.clip(idx, 0, S - 1)
+
+    kg = jnp.take(k, idx_c, axis=1)  # (B, nqb, slab, H, hd)  [in scope below]
+    vg = jnp.take(v, idx_c, axis=1)
+    qr = q.reshape(B, nqb, qb, H, hd)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum("bnqhd,bnkhd->bnhqk", qr.astype(jnp.float32), kg.astype(jnp.float32))
+    s = s * scale
+    # causal within slab + window bound + validity
+    q_pos = (jnp.arange(nqb) * qb)[:, None] + jnp.arange(qb)[None, :]  # (nqb, qb)
+    k_pos = idx  # (nqb, slab)
+    attend = (
+        (k_pos[:, None, :] <= q_pos[:, :, None])
+        & (k_pos[:, None, :] > q_pos[:, :, None] - window - 1)
+        & valid[:, None, :]
+    )  # (nqb, qb, slab)
+    s = jnp.where(attend[None, :, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnhqk,bnkhd->bnqhd", p, vg.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------- public entry ---
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    q_block: int = 512,
+    kv_block: int = 512,
+    causal_block_skip: bool = True,
+) -> jax.Array:
+    """Multi-head attention over full sequences (train / prefill).
+
+    q: (B, S, H, hd); k, v: (B, S, KV, hd) with H % KV == 0.
+    """
+    q_per_kv = q.shape[2] // k.shape[2]
+    k = _repeat_kv(k, q_per_kv)
+    v = _repeat_kv(v, q_per_kv)
+    S = q.shape[1]
+    kv_block = min(kv_block, S)
+    if sliding_window > 0 and S > sliding_window:
+        return _sliding_window(q, k, v, sliding_window, q_block)
+    # custom-vjp flash: recompute-in-backward, causal triangle chunking.
+    # causal_block_skip=False falls back to the full block grid (the naive
+    # baseline recorded in EXPERIMENTS.md #Perf).
+    n_chunks = N_Q_CHUNKS if causal_block_skip else 1
+    return flash_mha(q, k, v, causal, kv_block, n_chunks)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_len: jax.Array,
+    *,
+    sliding_window: int = 0,
+) -> jax.Array:
+    """Single-token attention: q (B, 1, H, hd), caches (B, S, KV, hd).
+
+    Works with sequence-sharded caches: the softmax reduction over S is a
+    sharded reduction XLA lowers to an all-reduce over the sharding axis.
+    """
+    with jax.named_scope("flash_attention_decode"):
+        return _decode_attention_scoped(q, k_cache, v_cache, cache_len,
+                                        sliding_window=sliding_window)
+
+
+def _decode_attention_scoped(q, k_cache, v_cache, cache_len, *, sliding_window=0):
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qg = q.reshape(B, H, hd).reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)
+    mask = pos[None, :] < cache_len  # (1, S) or (B, S)
+    if sliding_window > 0:
+        # the query sits at position cache_len - 1 and sees `window` keys back
+        mask = mask & (pos[None, :] >= cache_len - 1 - sliding_window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)

@@ -1,0 +1,347 @@
+"""Per-layer-kind init/apply.  Every layer kind implements:
+
+  init_layer(cfg, spec, key)                          -> params
+  apply_layer(cfg, spec, params, x, mode, cache, pos, shared) -> (x, cache')
+
+modes: "train" (full seq, no cache), "prefill" (full seq, emit cache),
+"decode" (one token, consume+emit cache).  `pos` is (B, S) positions (or
+(3, B, S) for M-RoPE); in decode it is the scalar-per-batch current index.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import ffn as F
+from repro.models import rwkv as R
+from repro.models import ssd as S
+from repro.models.common import ModelConfig, LayerSpec, rms_norm, init_dense, keygen
+from repro.models import sharding as sh
+
+TRAIN, PREFILL, DECODE = "train", "prefill", "decode"
+
+
+# ------------------------------------------------------------- attention ---
+
+def _init_attn(cfg: ModelConfig, kg) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "ln1": jnp.zeros((D,), jnp.float32),
+        "wq": init_dense(next(kg), (D, H * hd), dtype=cfg.dtype),
+        "wk": init_dense(next(kg), (D, KV * hd), dtype=cfg.dtype),
+        "wv": init_dense(next(kg), (D, KV * hd), dtype=cfg.dtype),
+        "wo": init_dense(next(kg), (H * hd, D), dtype=cfg.dtype),
+    }
+
+
+def _apply_attn(cfg, spec, p, x, mode, cache, pos):
+    B, T, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("btd,dh->bth", h, p["wq"]).reshape(B, T, H, hd)
+    k = jnp.einsum("btd,dh->bth", h, p["wk"]).reshape(B, T, KV, hd)
+    v = jnp.einsum("btd,dh->bth", h, p["wv"]).reshape(B, T, KV, hd)
+    q = sh.shard_heads(A.apply_rope(q, pos, spec.rope_theta, cfg.mrope_sections))
+    k = sh.shard_heads(A.apply_rope(k, pos, spec.rope_theta, cfg.mrope_sections), kv=True)
+    v = sh.shard_heads(v, kv=True)
+
+    new_cache = cache
+    if mode == DECODE:
+        # cache: {"k": (B, S, KV, hd), "v": ..., "len": ()}
+        idx = cache["len"]
+        k_c = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+        v_c = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+        out = A.decode_attention(q, k_c, v_c, idx + 1, sliding_window=spec.sliding_window)
+        new_cache = {"k": k_c, "v": v_c, "len": idx + 1}
+    else:
+        out = A.attention(
+            q, k, v,
+            causal=cfg.causal,
+            sliding_window=spec.sliding_window,
+            q_block=cfg.q_block,
+            kv_block=cfg.kv_block,
+            causal_block_skip=cfg.causal_block_skip,
+        )
+        if mode == PREFILL:
+            new_cache = {"k": k, "v": v, "len": jnp.int32(T)}
+    out = sh.shard_heads(out.reshape(B, T, H, hd))
+    y = jnp.einsum("bthd,hde->bte", out, p["wo"].reshape(H, hd, D))
+    return sh.shard_btd(x + y), new_cache
+
+
+def _attn_cache_spec(cfg, B, S, dtype):
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((B, S, KV, hd), dtype),
+        "v": jnp.zeros((B, S, KV, hd), dtype),
+        "len": jnp.int32(0),
+    }
+
+
+# ------------------------------------------------------------ dense / moe --
+
+def init_dense_layer(cfg: ModelConfig, spec: LayerSpec, key) -> dict:
+    kg = keygen(key)
+    p = _init_attn(cfg, kg)
+    D, Fd = cfg.d_model, cfg.d_ff
+    p.update({
+        "ln2": jnp.zeros((D,), jnp.float32),
+        "w_gate": init_dense(next(kg), (D, Fd), dtype=cfg.dtype),
+        "w_up": init_dense(next(kg), (D, Fd), dtype=cfg.dtype),
+        "w_down": init_dense(next(kg), (Fd, D), dtype=cfg.dtype),
+    })
+    return p
+
+
+def apply_dense_layer(cfg, spec, p, x, mode, cache, pos, shared=None):
+    x, cache = _apply_attn(cfg, spec, p, x, mode, cache, pos)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return sh.shard_btd(x + F.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])), cache
+
+
+def init_moe_layer(cfg: ModelConfig, spec: LayerSpec, key) -> dict:
+    kg = keygen(key)
+    p = _init_attn(cfg, kg)
+    D, Fd, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    p.update({
+        "ln2": jnp.zeros((D,), jnp.float32),
+        "router": init_dense(next(kg), (D, E), dtype=jnp.float32),
+        "w_gate": init_dense(next(kg), (E, D, Fd), dtype=cfg.dtype),
+        "w_up": init_dense(next(kg), (E, D, Fd), dtype=cfg.dtype),
+        "w_down": init_dense(next(kg), (E, Fd, D), in_axis=-2, dtype=cfg.dtype),
+    })
+    return p
+
+
+def apply_moe_layer(cfg, spec, p, x, mode, cache, pos, shared=None):
+    x, cache = _apply_attn(cfg, spec, p, x, mode, cache, pos)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    b = sh._binding()
+    # shard_map a2a path when running distributed with experts on `model`
+    # and batch sharded over data (the production configuration); otherwise
+    # the dense-dispatch paths (single device / smoke tests / baselines).
+    mesh = b.get("mesh") if b else None
+    n_model = mesh.shape.get("model", 1) if mesh else 1
+    n_local = (x.shape[0] * x.shape[1]) // max(b.get("n_data", 1), 1) if b else 0
+    if (
+        b is not None
+        and b.get("expert") == "model"
+        and b.get("batch")
+        and cfg.moe_impl == "a2a"
+        and n_local % max(n_model, 1) == 0
+    ):
+        y = F.moe_ffn_a2a(
+            h, p["router"], p["w_gate"], p["w_up"], p["w_down"],
+            experts_per_tok=cfg.experts_per_tok,
+            capacity_factor=cfg.capacity_factor,
+            batch_axes=b["batch"],
+            mesh=b.get("mesh"),
+        )
+    else:
+        y = F.moe_ffn(
+            h, p["router"], p["w_gate"], p["w_up"], p["w_down"],
+            experts_per_tok=cfg.experts_per_tok,
+            capacity_factor=cfg.capacity_factor,
+            block_dispatch=cfg.moe_impl != "naive",
+        )
+    return sh.shard_btd(x + y), cache
+
+
+# ------------------------------------------------------------------ rwkv ---
+
+def init_rwkv_layer(cfg: ModelConfig, spec: LayerSpec, key) -> dict:
+    kg = keygen(key)
+    D, Fd = cfg.d_model, cfg.d_ff
+    H = cfg.num_heads
+    P = D // H
+    lora_r = max(32, D // 64)
+    mus = {f"mu_{n}": jnp.full((D,), 0.5, jnp.float32) for n in "rkvgw"}
+    return {
+        "ln1": jnp.zeros((D,), jnp.float32),
+        "ln2": jnp.zeros((D,), jnp.float32),
+        **mus,
+        "w_r": init_dense(next(kg), (D, D), dtype=cfg.dtype),
+        "w_k": init_dense(next(kg), (D, D), dtype=cfg.dtype),
+        "w_v": init_dense(next(kg), (D, D), dtype=cfg.dtype),
+        "w_g": init_dense(next(kg), (D, D), dtype=cfg.dtype),
+        "w_o": init_dense(next(kg), (D, D), dtype=cfg.dtype),
+        "w0": jnp.full((D,), 0.6, jnp.float32),
+        "wA": init_dense(next(kg), (D, lora_r), dtype=jnp.float32, scale=0.1),
+        "wB": jnp.zeros((lora_r, D), jnp.float32),
+        "u": init_dense(next(kg), (H, P), dtype=jnp.float32, scale=0.5),
+        "ln_x": jnp.zeros((D,), jnp.float32),
+        "mu_ck": jnp.full((D,), 0.5, jnp.float32),
+        "mu_cr": jnp.full((D,), 0.5, jnp.float32),
+        "w_ck": init_dense(next(kg), (D, Fd), dtype=cfg.dtype),
+        "w_cv": init_dense(next(kg), (Fd, D), dtype=cfg.dtype),
+        "w_cr": init_dense(next(kg), (D, D), dtype=cfg.dtype),
+    }
+
+
+def apply_rwkv_layer(cfg, spec, p, x, mode, cache, pos, shared=None):
+    B, T, D = x.shape
+    H = cfg.num_heads
+    P = D // H
+    if cache is None:
+        cache = {
+            "state": jnp.zeros((B, H, P, P), jnp.float32),
+            "shift_t": jnp.zeros((B, 1, D), x.dtype),
+            "shift_c": jnp.zeros((B, 1, D), x.dtype),
+        }
+    # ---- time mix
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    prev = cache["shift_t"] if mode == DECODE else None
+    hs = R.token_shift(h, prev)
+    r, k, v, g, w = R.time_mix_params_apply(h, hs, p)
+    r, k, v, g, w = map(sh.shard_btd, (r, k, v, g, w))
+    if mode == DECODE:
+        y, state = R.wkv_decode(r, k, v, w, p["u"], sh.shard_state(cache["state"]))
+    else:
+        y, state = R.wkv_chunked(r, k, v, w, p["u"], H, chunk=min(64, T))
+    state = sh.shard_state(state)
+    y = sh.shard_btd(y)
+    y = rms_norm(y.astype(x.dtype), p["ln_x"], cfg.norm_eps)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    x = sh.shard_btd(x + jnp.einsum("btd,de->bte", y, p["w_o"]))
+    # ---- channel mix
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    prev_c = cache["shift_c"] if mode == DECODE else None
+    hs2 = R.token_shift(h2, prev_c)
+    x = sh.shard_btd(x + R.channel_mix(h2, hs2, p))
+    new_cache = cache
+    if mode in (PREFILL, DECODE):
+        new_cache = {
+            "state": state,
+            "shift_t": h[:, -1:],
+            "shift_c": h2[:, -1:],
+        }
+    return x, new_cache
+
+
+def _rwkv_cache_spec(cfg, B, dtype):
+    H = cfg.num_heads
+    P = cfg.d_model // H
+    return {
+        "state": jnp.zeros((B, H, P, P), jnp.float32),
+        "shift_t": jnp.zeros((B, 1, cfg.d_model), dtype),
+        "shift_c": jnp.zeros((B, 1, cfg.d_model), dtype),
+    }
+
+
+# ----------------------------------------------------------------- mamba ---
+
+def _mamba_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_ch = d_in + 2 * N
+    return d_in, H, N, conv_ch
+
+
+def init_mamba_layer(cfg: ModelConfig, spec: LayerSpec, key) -> dict:
+    kg = keygen(key)
+    D = cfg.d_model
+    d_in, H, N, conv_ch = _mamba_dims(cfg)
+    proj_out = 2 * d_in + 2 * N + H
+    return {
+        "ln": jnp.zeros((D,), jnp.float32),
+        "in_proj": init_dense(next(kg), (D, proj_out), dtype=cfg.dtype),
+        "conv_w": init_dense(next(kg), (cfg.ssm_conv, conv_ch), dtype=cfg.dtype, scale=0.5),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "gnorm": jnp.zeros((d_in,), jnp.float32),
+        "out_proj": init_dense(next(kg), (d_in, D), dtype=cfg.dtype),
+    }
+
+
+def apply_mamba_layer(cfg, spec, p, x, mode, cache, pos, shared=None):
+    B, T, D = x.shape
+    d_in, H, N, conv_ch = _mamba_dims(cfg)
+    P = cfg.ssm_head_dim
+    if cache is None:
+        cache = _mamba_cache_spec(cfg, B, x.dtype)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    proj = sh.shard_btd(jnp.einsum("btd,dm->btm", h, p["in_proj"]))
+    z, xbc, dt = jnp.split(proj, [d_in, d_in + conv_ch], axis=-1)
+    conv_prev = cache["conv"] if mode == DECODE else None
+    xbc, conv_state = S.causal_conv1d(xbc, p["conv_w"], conv_prev)
+    xs, B_, C = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A_ = -jnp.exp(p["A_log"])
+    xh = sh.shard_bthp(xs.reshape(B, T, H, P))
+    if mode == DECODE:
+        y, ssm = S.ssd_decode(xh, dt, A_, B_, C, sh.shard_state(cache["ssm"]))
+    else:
+        y, ssm = S.ssd_chunked(xh, dt, A_, B_, C, chunk=min(64, T))
+    ssm = sh.shard_state(ssm)
+    y = sh.shard_bthp(y)
+    y = y + p["D_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(B, T, d_in)
+    y = rms_norm(y, p["gnorm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    x = sh.shard_btd(x + jnp.einsum("btm,md->btd", y.astype(x.dtype), p["out_proj"]))
+    new_cache = cache
+    if mode in (PREFILL, DECODE):
+        new_cache = {"ssm": ssm, "conv": conv_state}
+    return x, new_cache
+
+
+def _mamba_cache_spec(cfg, B, dtype):
+    d_in, H, N, conv_ch = _mamba_dims(cfg)
+    return {
+        "ssm": jnp.zeros((B, H, cfg.ssm_head_dim, N), jnp.float32),
+        "conv": jnp.zeros((B, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+# ------------------------------------------------ mamba + shared attention -
+
+def apply_mamba_shared(cfg, spec, p, x, mode, cache, pos, shared=None):
+    """Mamba block followed by the Zamba2 shared attention+MLP block
+    (one parameter set reused at every application; per-application cache)."""
+    if cache is None:
+        cache = {"mamba": None, "shared_attn": None}
+    x, mcache = apply_mamba_layer(cfg, spec, p, x, mode, cache.get("mamba"), pos)
+    x, scache = apply_dense_layer(
+        cfg, spec, shared, x, mode, cache.get("shared_attn"), pos
+    )
+    return x, {"mamba": mcache, "shared_attn": scache}
+
+
+# --------------------------------------------------------------- registry --
+
+INIT = {
+    "dense": init_dense_layer,
+    "enc": init_dense_layer,
+    "moe": init_moe_layer,
+    "rwkv": init_rwkv_layer,
+    "mamba": init_mamba_layer,
+    "mamba_shared_attn": init_mamba_layer,
+}
+
+APPLY = {
+    "dense": apply_dense_layer,
+    "enc": apply_dense_layer,
+    "moe": apply_moe_layer,
+    "rwkv": apply_rwkv_layer,
+    "mamba": apply_mamba_layer,
+    "mamba_shared_attn": apply_mamba_shared,
+}
+
+
+def cache_spec(cfg: ModelConfig, spec: LayerSpec, B: int, S: int, dtype):
+    """Zero-initialized cache pytree for one layer of the given kind."""
+    if spec.kind in ("dense", "moe", "enc"):
+        return _attn_cache_spec(cfg, B, S, dtype)
+    if spec.kind == "rwkv":
+        return _rwkv_cache_spec(cfg, B, dtype)
+    if spec.kind == "mamba":
+        return _mamba_cache_spec(cfg, B, dtype)
+    if spec.kind == "mamba_shared_attn":
+        return {
+            "mamba": _mamba_cache_spec(cfg, B, dtype),
+            "shared_attn": _attn_cache_spec(cfg, B, S, dtype),
+        }
+    raise ValueError(spec.kind)

@@ -1,0 +1,112 @@
+"""Shared model-definition machinery: config, norms, embeddings, init.
+
+All architectures are expressed as a repeating *pattern* of layer specs
+(a super-block) scanned ``repeats`` times, plus an unrolled tail.  Params
+for pattern position i are stacked with leading dim ``repeats`` so
+``jax.lax.scan`` keeps HLO size and compile time O(pattern), not O(layers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# Layer-spec kinds used in patterns
+DENSE = "dense"          # GQA attention + gated MLP
+MOE = "moe"              # GQA attention + mixture-of-experts MLP
+RWKV = "rwkv"            # RWKV-6 time mix + channel mix
+MAMBA = "mamba"          # Mamba-2 SSD block
+MAMBA_SHARED_ATTN = "mamba_shared_attn"  # mamba block + shared attention block
+ENC = "enc"              # bidirectional encoder block
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str
+    sliding_window: int = 0     # 0 = full attention
+    rope_theta: float = 1e4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | rwkv | hybrid | encoder | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # pattern machinery
+    pattern: tuple = ()          # tuple[LayerSpec, ...]
+    repeats: int = 0
+    tail: tuple = ()             # tuple[LayerSpec, ...]
+    # MoE
+    num_experts: int = 0
+    experts_per_tok: int = 0
+    capacity_factor: float = 1.25
+    # RoPE
+    rope_theta: float = 1e4
+    mrope_sections: tuple = ()   # e.g. (16, 24, 24) for qwen2-vl
+    # SSM
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    # shared-attention hybrid (zamba2)
+    shared_attn: bool = False
+    # encoder-only (no decode path)
+    causal: bool = True
+    # embeddings-as-input stub frontend ([audio]/[vlm] per brief)
+    embed_inputs: bool = False
+    tie_embeddings: bool = False  # lm_head = embed.T (smollm, gemma3)
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    # attention block compute (pure-jnp flash) parameters
+    q_block: int = 512
+    kv_block: int = 512
+    # beyond-paper perf knobs (see EXPERIMENTS.md §Perf)
+    causal_block_skip: bool = True   # skip fully-masked KV blocks in flash attn
+    use_pallas: bool = False         # swap in Pallas kernels (TPU runtime)
+    attn_batch_reshard: bool = True  # batch->model reshard when heads don't TP-shard
+    moe_impl: str = "a2a"            # "a2a" (shard_map EP) | "block" | "naive"
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    def validate(self) -> None:
+        n_pattern = len(self.pattern) * self.repeats + len(self.tail)
+        assert n_pattern == self.num_layers, (
+            f"{self.name}: pattern covers {n_pattern} layers, expected {self.num_layers}"
+        )
+        assert self.num_heads % self.num_kv_heads == 0
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_dense(key, shape, in_axis=-2, dtype=jnp.bfloat16, scale=1.0):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    std = scale / jnp.sqrt(jnp.float32(fan_in))
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std).astype(dtype)
+
+
+def stacked_init(key, repeats: int, init_fn):
+    """Initialize `repeats` copies with independent keys, stacked on axis 0."""
+    keys = jax.random.split(key, repeats)
+    return jax.vmap(init_fn)(keys)
+
+
+def keygen(key):
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub

@@ -1,0 +1,195 @@
+"""Feed-forward layers: gated (SwiGLU) MLP and capacity-based MoE.
+
+The MoE uses token-choice top-k routing with per-expert capacity and
+dropped-token overflow (Switch/Mixtral style).  Dispatch/combine are
+expressed as scatters/gathers over an (E, C, D) buffer whose expert axis is
+sharded over the `model` mesh axis (expert parallelism); XLA lowers the
+token->expert movement to all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding as sh
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("btd,df->btf", x, w_gate)
+    u = jnp.einsum("btd,df->btf", x, w_up)
+    h = sh.shard_btf(jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u)
+    return jnp.einsum("btf,fd->btd", h, w_down)
+
+
+NUM_TOKEN_BLOCKS = 32  # divides every assigned global batch x seq
+
+
+def _num_blocks(N: int) -> int:
+    nb = min(NUM_TOKEN_BLOCKS, N)
+    while N % nb:
+        nb -= 1
+    return nb
+
+
+def moe_ffn(
+    x: jax.Array,
+    router: jax.Array,     # (D, E)
+    w_gate: jax.Array,     # (E, D, F)
+    w_up: jax.Array,       # (E, D, F)
+    w_down: jax.Array,     # (E, F, D)
+    *,
+    experts_per_tok: int,
+    capacity_factor: float = 1.25,
+    block_dispatch: bool = True,
+) -> jax.Array:
+    """Top-k token-choice MoE with capacity. x: (B, T, D) -> (B, T, D).
+
+    Block-structured dispatch (the beyond-paper optimization measured in
+    EXPERIMENTS.md #Perf): tokens are grouped into NUM_TOKEN_BLOCKS blocks
+    aligned with the data sharding, and capacity is per (block, expert).
+    The dispatch buffer (NB, E, C_b, D) is sharded (data, model, -, -):
+    dispatch is then communication-free (activations are model-replicated
+    after attention, so each device scatters its blocks' tokens into its
+    expert columns locally) and the combine is one sliced gather instead
+    of a full-buffer all-reduce.  The naive single-buffer path
+    (block_dispatch=False) is the #Perf baseline: XLA must all-reduce the
+    whole (E, C, D) buffer every layer.
+    """
+    B, T, D = x.shape
+    E = router.shape[1]
+    N = B * T
+    k = experts_per_tok
+    NB = _num_blocks(N) if block_dispatch else 1
+    Nb = N // NB
+    cap = max(1, int(capacity_factor * Nb * k / E))
+
+    xt = x.reshape(NB, Nb, D)
+    logits = jnp.einsum("bnd,de->bne", xt.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)        # (NB, Nb, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its (block, expert) capacity
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)      # (NB, Nb, k, E)
+    flat_oh = onehot.reshape(NB, Nb * k, E)
+    pos_in_e = jnp.cumsum(flat_oh, axis=1) - flat_oh             # (NB, Nb*k, E)
+    pos = (pos_in_e * flat_oh).sum(-1).reshape(NB, Nb, k)
+    keep = pos < cap
+    gate_vals = jnp.where(keep, gate_vals, 0.0)
+
+    # scatter tokens into the per-block (E*C, D) dispatch buffer
+    slot = expert_idx * cap + jnp.minimum(pos, cap - 1)          # (NB, Nb, k)
+    buf = jnp.zeros((NB, E * cap, D), x.dtype)
+    src = jnp.repeat(xt[:, :, None, :], k, axis=2)               # (NB, Nb, k, D)
+    src = jnp.where(keep[..., None], src, 0)
+    bidx = jnp.arange(NB)[:, None]
+    buf = buf.at[bidx, slot.reshape(NB, Nb * k)].add(src.reshape(NB, Nb * k, D))
+    buf = sh.shard_moe_buf(buf.reshape(NB, E, cap, D))
+
+    # expert computation (blocks over data, experts over `model`)
+    g = jnp.einsum("becd,edf->becf", buf, w_gate)
+    u = jnp.einsum("becd,edf->becf", buf, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out_buf = sh.shard_moe_buf(jnp.einsum("becf,efd->becd", h, w_down))
+    out_buf = out_buf.reshape(NB, E * cap, D)
+
+    # gather back and combine with gate weights
+    picked = out_buf[bidx[:, :, None], slot]                     # (NB, Nb, k, D)
+    combined = (picked.astype(jnp.float32) * gate_vals[..., None]).sum(axis=2)
+    return sh.shard_btd(combined.reshape(B, T, D).astype(x.dtype))
+
+
+# ----------------------------------------------------------- a2a variant --
+#
+# The XLA SPMD partitioner cannot prove locality of the dispatch scatter /
+# combine gather (measured: it falls back to replicating the (E, C, D)
+# buffer -> hundreds of TB of "collective" traffic per step on the 94-layer
+# MoE).  shard_map makes the expert-parallel exchange explicit: local
+# top-k + scatter, ONE all-to-all over `model` out, local expert matmuls,
+# one all-to-all back, local combine — the textbook EP schedule with
+# minimal traffic (local_tokens * k * cf * D bytes each way per layer).
+
+def moe_ffn_a2a(
+    x: jax.Array,          # (B, T, D) sharded over data axes
+    router: jax.Array,     # (D, E)
+    w_gate: jax.Array,     # (E, D, F) sharded over model on E
+    w_up: jax.Array,
+    w_down: jax.Array,     # (E, F, D)
+    *,
+    experts_per_tok: int,
+    capacity_factor: float,
+    batch_axes: tuple,
+    model_axis: str = "model",
+    mesh=None,
+) -> jax.Array:
+    E = router.shape[1]
+    k = experts_per_tok
+    from jax.sharding import PartitionSpec as P
+
+    def local_body(xl, rl, wgl, wul, wdl):
+        nm = jax.lax.axis_size(model_axis)
+        ml = jax.lax.axis_index(model_axis)
+        El = E // nm
+        Bl, T, D = xl.shape
+        # x is replicated over `model`: each model rank owns a disjoint
+        # token slice so the all-to-all exchanges distinct data
+        n_all = Bl * T
+        n = n_all // nm
+        cap = max(4, -(-int(capacity_factor * n * k) // E))
+        xt = jax.lax.dynamic_slice_in_dim(xl.reshape(n_all, D), ml * n, n, 0)
+        logits = jnp.einsum("nd,de->ne", xt.astype(jnp.float32),
+                            rl.astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, eidx = jax.lax.top_k(probs, k)                   # (n, k)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+        oh = jax.nn.one_hot(eidx, E, dtype=jnp.int32).reshape(n * k, E)
+        pos = ((jnp.cumsum(oh, 0) - oh) * oh).sum(-1).reshape(n, k)
+        keep = pos < cap
+        gate = jnp.where(keep, gate, 0.0)
+        slot = eidx * cap + jnp.minimum(pos, cap - 1)          # (n, k)
+        src = jnp.where(keep[..., None], jnp.repeat(xt[:, None], k, axis=1), 0)
+        buf = jnp.zeros((E * cap, D), xl.dtype)
+        buf = buf.at[slot.reshape(-1)].add(src.reshape(n * k, D))
+        # exchange: each device keeps its El experts from every source shard
+        recv = jax.lax.all_to_all(
+            buf.reshape(nm, El * cap, D), model_axis, 0, 0, tiled=True
+        ).reshape(nm, El, cap, D)
+        g = jnp.einsum("secd,edf->secf", recv, wgl)
+        u = jnp.einsum("secd,edf->secf", recv, wul)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xl.dtype) * u
+        out = jnp.einsum("secf,efd->secd", h, wdl)             # (nm, El, cap, D)
+        back = jax.lax.all_to_all(
+            out.reshape(nm, El * cap, D), model_axis, 0, 0, tiled=True
+        ).reshape(E * cap, D)
+        picked = back[slot.reshape(-1)].reshape(n, k, D)
+        comb = (picked.astype(jnp.float32) * gate[..., None]).sum(axis=1)
+        # reassemble the full token set (re-replicates over `model`)
+        full = jax.lax.all_gather(comb.astype(xl.dtype), model_axis,
+                                  axis=0, tiled=True)
+        return full.reshape(Bl, T, D)
+
+    # check_vma=False: the static replication checker cannot see through
+    # all_to_all/all_gather; the final all_gather guarantees the output is
+    # replicated over `model` as out_specs declares.
+    return jax.shard_map(
+        local_body,
+        mesh=mesh,
+        check_vma=False,
+        in_specs=(
+            P(batch_axes, None, None),
+            P(None, None),
+            P(model_axis, None, None),
+            P(model_axis, None, None),
+            P(model_axis, None, None),
+        ),
+        out_specs=P(batch_axes, None, None),
+    )(x, router, w_gate, w_up, w_down)
+
+
+def moe_aux_loss(logits: jax.Array, expert_idx: jax.Array, num_experts: int) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch-style)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = probs.mean(axis=0)
+    ce = jax.nn.one_hot(expert_idx[:, 0], num_experts).mean(axis=0)
+    return num_experts * jnp.sum(me * ce)

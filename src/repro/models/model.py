@@ -1,0 +1,219 @@
+"""Unified model API over the pattern machinery.
+
+  init_params(cfg, key)          -> params pytree
+  init_cache(cfg, B, S)          -> decode cache pytree
+  train_loss(cfg, params, batch) -> (loss, metrics)
+  prefill(cfg, params, batch)    -> (last_logits, cache)
+  decode_step(cfg, params, cache, token/embed, pos) -> (logits, cache)
+
+Layers are scanned over the stacked `repeats` axis (one super-block of
+`pattern` specs per step) with optional remat; `tail` layers and the
+Zamba2 shared block are applied unrolled.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models.blocks import TRAIN, PREFILL, DECODE
+from repro.models.common import ModelConfig, rms_norm, init_dense, stacked_init, keygen
+from repro.models import sharding as sh
+
+
+# ------------------------------------------------------------------- init --
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    cfg.validate()
+    kg = keygen(key)
+    params: dict = {}
+    if not cfg.embed_inputs:
+        params["embed"] = init_dense(next(kg), (cfg.vocab_size, cfg.d_model),
+                                     in_axis=-1, dtype=cfg.dtype)
+    params["groups"] = [
+        stacked_init(next(kg), cfg.repeats,
+                     partial(B.INIT[spec.kind], cfg, spec))
+        for spec in cfg.pattern
+    ]
+    params["tail"] = [B.INIT[spec.kind](cfg, spec, next(kg)) for spec in cfg.tail]
+    if cfg.shared_attn:
+        params["shared"] = B.init_dense_layer(cfg, cfg.pattern[-1], next(kg))
+    params["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if not (cfg.tie_embeddings and not cfg.embed_inputs):
+        params["lm_head"] = init_dense(next(kg), (cfg.d_model, cfg.vocab_size),
+                                       dtype=cfg.dtype)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct tree of params without allocating (for the dry-run)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ------------------------------------------------------------------ cache --
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    groups = [
+        jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.repeats, *x.shape)),
+            B.cache_spec(cfg, spec, batch, max_seq, cfg.dtype),
+        )
+        for spec in cfg.pattern
+    ]
+    tail = [B.cache_spec(cfg, spec, batch, max_seq, cfg.dtype) for spec in cfg.tail]
+    return {"groups": groups, "tail": tail, "len": jnp.int32(0)}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+
+
+# ---------------------------------------------------------------- forward --
+
+def _positions(cfg: ModelConfig, batch_size: int, seq: int, offset=0):
+    pos = offset + jnp.arange(seq, dtype=jnp.int32)[None, :]
+    pos = jnp.broadcast_to(pos, (batch_size, seq))
+    if cfg.mrope_sections:
+        return jnp.broadcast_to(pos[None], (3, batch_size, seq))
+    return pos
+
+
+def _embed_in(cfg: ModelConfig, params, batch):
+    if cfg.embed_inputs:
+        x = batch["embeds"].astype(cfg.dtype)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.mrope_sections and "positions" in batch:
+        pos = batch["positions"]
+    else:
+        pos = _positions(cfg, x.shape[0], x.shape[1])
+    return sh.shard_btd(x), pos
+
+
+def _run_layers(cfg: ModelConfig, params, x, pos, mode, cache=None, remat=False):
+    """Pattern scan + tail. Returns (x, new_cache_or_None)."""
+    shared = params.get("shared")
+    n_pos = len(cfg.pattern)
+
+    def body(x, layer_params, layer_cache):
+        new_caches = []
+        for i, spec in enumerate(cfg.pattern):
+            c_i = None if layer_cache is None else layer_cache[i]
+            x, nc = B.APPLY[spec.kind](cfg, spec, layer_params[i], x, mode, c_i,
+                                       pos, shared)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    if mode == TRAIN:
+        def scan_body(carry, xs):
+            f = jax.checkpoint(lambda c, p: body(c, p, None)[0]) if remat else \
+                (lambda c, p: body(c, p, None)[0])
+            return f(carry, xs), None
+        x, _ = jax.lax.scan(scan_body, x, tuple(params["groups"]))
+        new_cache = None
+    elif mode == PREFILL:
+        def scan_body(carry, xs):
+            x_new, caches = body(carry, xs, None)
+            return x_new, caches
+        x, group_caches = jax.lax.scan(scan_body, x, tuple(params["groups"]))
+        new_cache = {"groups": list(group_caches)}
+    else:  # DECODE
+        def scan_body(carry, xs):
+            lp, lc = xs
+            x_new, caches = body(carry, lp, lc)
+            return x_new, caches
+        x, group_caches = jax.lax.scan(
+            scan_body, x, (tuple(params["groups"]), tuple(cache["groups"]))
+        )
+        new_cache = {"groups": list(group_caches)}
+
+    tail_caches = []
+    for i, spec in enumerate(cfg.tail):
+        c_i = None if (mode == TRAIN or cache is None) else cache["tail"][i]
+        x, nc = B.APPLY[spec.kind](cfg, spec, params["tail"][i], x, mode, c_i,
+                                   pos, shared)
+        tail_caches.append(nc)
+    if new_cache is not None:
+        new_cache["tail"] = tail_caches
+    return x, new_cache
+
+
+# ------------------------------------------------------------------- loss --
+
+def _logits(cfg, params, x):
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if "lm_head" in params:
+        logits = jnp.einsum("btd,dv->btv", h, params["lm_head"])
+    else:  # tied embeddings
+        logits = jnp.einsum("btd,vd->btv", h, params["embed"])
+    return sh.shard_logits(logits)
+
+
+def cross_entropy(logits, labels, mask):
+    """Token-mean CE; logsumexp in f32; vocab may be model-sharded."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def train_loss(cfg: ModelConfig, params, batch, remat: bool = True):
+    """batch: tokens/embeds + labels + mask. Next-token LM loss (causal) or
+    masked-unit prediction (encoder-only, mask marks predicted frames)."""
+    x, pos = _embed_in(cfg, params, batch)
+    x, _ = _run_layers(cfg, params, x, pos, TRAIN, remat=remat)
+    logits = _logits(cfg, params, x)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    loss = cross_entropy(logits, labels, mask)
+    return loss, {"loss": loss, "tokens": mask.sum()}
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Full-sequence forward building the KV/state cache; returns logits of
+    the last position only (B, V)."""
+    x, pos = _embed_in(cfg, params, batch)
+    x, cache = _run_layers(cfg, params, x, pos, PREFILL)
+    last = x[:, -1:]
+    logits = _logits(cfg, params, last)[:, 0]
+    cache["len"] = jnp.int32(x.shape[1])
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch):
+    """One decode step. batch: {"token": (B,1) int32 or "embeds": (B,1,D)}.
+    Uses cache["len"] as the current position."""
+    if cfg.embed_inputs:
+        x = batch["embeds"].astype(cfg.dtype)
+    else:
+        x = jnp.take(params["embed"], batch["token"], axis=0)
+    B_ = x.shape[0]
+    pos = _positions(cfg, B_, 1, offset=cache["len"])
+    x, new_cache = _run_layers(cfg, params, x, pos, DECODE, cache=cache)
+    logits = _logits(cfg, params, x)[:, 0]
+    new_cache["len"] = cache["len"] + 1
+    return logits, new_cache
+
+
+def num_params(cfg: ModelConfig) -> int:
+    import math
+
+    tree = abstract_params(cfg)
+    return sum(math.prod(l.shape) if l.shape else 1 for l in jax.tree.leaves(tree))
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: k of E experts active)."""
+    total = num_params(cfg)
+    if cfg.num_experts:
+        expert_block = 3 * cfg.d_model * cfg.d_ff  # gate+up+down per expert
+        n_moe = sum(1 for s in cfg.pattern if s.kind == "moe") * cfg.repeats
+        n_moe += sum(1 for s in cfg.tail if s.kind == "moe")
+        inactive = n_moe * (cfg.num_experts - cfg.experts_per_tok) * expert_block
+        return total - inactive
+    return total

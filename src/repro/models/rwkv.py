@@ -1,0 +1,123 @@
+"""RWKV-6 ("Finch") time-mix and channel-mix — attention-free sequence
+mixing with data-dependent decay.
+
+Per head (size P): state S in R^{P x P} evolves as
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+with data-dependent decay w_t = exp(-exp(w0 + LoRA_w(x_t))) in (0, 1).
+
+Training/prefill uses a chunked formulation (chunk length Lc): within-chunk
+pairwise interactions via masked matmuls with cumulative-decay weighting,
+across chunks a state carry — O(S * Lc * P) instead of O(S^2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def token_shift(x: jax.Array, prev: jax.Array | None = None):
+    """RWKV token shift: x[t-1] stream. prev: (B, 1, D) carry for decode."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _lora(x, A, B_):  # noqa: N803
+    return jnp.einsum("btd,dr->btr", x, A) @ B_
+
+
+def time_mix_params_apply(x, xs, p):
+    """Compute per-token r, k, v, g, w from token-shifted mixes."""
+    def mix(mu):
+        return x + (xs - x) * mu
+
+    r = jnp.einsum("btd,dh->bth", mix(p["mu_r"]), p["w_r"])
+    k = jnp.einsum("btd,dh->bth", mix(p["mu_k"]), p["w_k"])
+    v = jnp.einsum("btd,dh->bth", mix(p["mu_v"]), p["w_v"])
+    g = jnp.einsum("btd,dh->bth", mix(p["mu_g"]), p["w_g"])
+    # data-dependent decay (the Finch contribution); the clamp bounds the
+    # per-token decay at w >= exp(-1.2) ~ 0.30 so chunked cumulative-decay
+    # ratios stay within f32 range (real RWKV decays sit in (0.9, 0.999))
+    ww = p["w0"] + jnp.tanh(jnp.einsum("btd,dr->btr", mix(p["mu_w"]), p["wA"])) @ p["wB"]
+    w = jnp.exp(-jnp.exp(jnp.minimum(ww.astype(jnp.float32), 0.18)))  # (B, T, H*P)
+    return r, k, v, g, w
+
+
+def wkv_chunked(r, k, v, w, u, num_heads: int, chunk: int = 64, state0=None):
+    """Chunked WKV-6. r/k/v/w: (B, T, H*P), u: (H, P).
+
+    Returns (y (B, T, H*P), final_state (B, H, P, P)).  f32 state math.
+    """
+    B, T, HP = r.shape
+    H = num_heads
+    P = HP // H
+    nc = max(1, T // chunk)
+    Lc = T // nc
+    assert nc * Lc == T, f"T={T} not divisible into chunks of {chunk}"
+
+    def reshape(x):
+        return x.reshape(B, nc, Lc, H, P).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+
+    r_, k_, v_, w_ = map(reshape, (r, k, v, w))  # (nc, B, H, Lc, P)
+    logw = jnp.log(jnp.maximum(w_, 1e-38))        # negative
+    # cumulative decay within chunk: A[t] = prod_{s<=t} w[s]
+    cum = jnp.cumsum(logw, axis=3)                # (nc, B, H, Lc, P)
+    A_incl = jnp.exp(cum)                         # includes w_t
+    A_excl = jnp.exp(cum - logw)                  # excludes w_t (prod_{s<t})
+    total = jnp.exp(cum[:, :, :, -1:, :])         # (nc, B, H, 1, P)
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, P, P), jnp.float32)
+
+    u_f = u.astype(jnp.float32)  # (H, P)
+
+    def step(S, blk):
+        rc, kc, vc, Ai, Ae, tot, logwc = blk
+        # inter-chunk: y_inter[t] = (r_t * A_excl[t]) @ S
+        y_inter = jnp.einsum("bhtp,bhpq->bhtq", rc * Ae, S)
+        # intra-chunk: att[t, s] = sum_p r_t[p] k_s[p] * (A_excl[t]/A_incl[s]) for s < t
+        # decay(t,s) = exp(cum_excl[t] - cum_incl[s])
+        qd = rc * Ae                                  # (b,h,t,p)
+        kd = kc / jnp.maximum(Ai, 1e-30)              # (b,h,s,p)
+        att = jnp.einsum("bhtp,bhsp->bhts", qd, kd)
+        tmask = jnp.tril(jnp.ones((rc.shape[2], rc.shape[2]), bool), k=-1)
+        att = jnp.where(tmask[None, None], att, 0.0)
+        # diagonal "bonus" term: u * k_t
+        diag = jnp.einsum("bhtp,bhtp->bht", rc, u_f[None, :, None, :] * kc)
+        y_intra = jnp.einsum("bhts,bhsp->bhtp", att, vc) + diag[..., None] * vc
+        # state update: S' = diag(total) S + sum_s (total/A_incl[s]) k_s v_s^T
+        kw = kc * (tot / jnp.maximum(Ai, 1e-30))
+        S_new = S * tot.transpose(0, 1, 3, 2) + jnp.einsum("bhsp,bhsq->bhpq", kw, vc)
+        return S_new, y_inter + y_intra
+
+    S_final, ys = jax.lax.scan(
+        step, state0, (r_, k_, v_, A_incl, A_excl, total, logw)
+    )
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, T, HP)
+    return y, S_final
+
+
+def wkv_decode(r, k, v, w, u, state):
+    """One-token WKV update. r/k/v/w: (B, 1, H*P); state (B, H, P, P)."""
+    B, _, HP = r.shape
+    H, P = state.shape[1], state.shape[2]
+    rf = r.reshape(B, H, P).astype(jnp.float32)
+    kf = k.reshape(B, H, P).astype(jnp.float32)
+    vf = v.reshape(B, H, P).astype(jnp.float32)
+    wf = w.reshape(B, H, P).astype(jnp.float32)
+    kv = jnp.einsum("bhp,bhq->bhpq", kf, vf)
+    y = jnp.einsum("bhp,bhpq->bhq", rf, state + u.astype(jnp.float32)[None, :, :, None] * kv)
+    state = state * wf[..., None] + kv
+    return y.reshape(B, 1, HP), state
+
+
+def channel_mix(x, xs, p):
+    """RWKV channel mix: sigmoid(r) * W_v relu(W_k mix)^2."""
+    xk = x + (xs - x) * p["mu_ck"]
+    xr = x + (xs - x) * p["mu_cr"]
+    kk = jnp.einsum("btd,df->btf", xk, p["w_ck"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    vv = jnp.einsum("btf,fd->btd", kk, p["w_cv"])
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["w_cr"]).astype(jnp.float32))
+    return (rr * vv.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,327 @@
+"""Parameter / cache / batch PartitionSpecs.
+
+Sharding policy (mesh axes: optional "pod", "data", "model"):
+  * TP over `model`: attention q-heads, FFN hidden, vocab, MoE experts (EP).
+  * FSDP over the data axes (`pod`+`data`): every large parameter's
+    remaining big dimension, plus all optimizer state (ZeRO-3 style —
+    XLA all-gathers weights per layer inside the scan).
+  * Batch over the data axes; KV-cache sequence over `model` for decode
+    (and over data axes too for the B=1 long-context cell).
+Dimensions that do not divide evenly by the axis size are replicated
+(e.g. gemma3's 8 q-heads on a 16-way model axis, hubert's 504-way vocab).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+# --------------------------------------------------------------------------
+# Activation-sharding binding: model code calls shard_*(x) helpers which are
+# no-ops unless a binding is active (set by the launcher around tracing).
+# Without explicit constraints XLA's propagation replicates activations
+# across the data axis inside the layer scans (measured 200x per-device
+# FLOP inflation on the 16x16 mesh) — these constraints pin:
+#   batch dim -> data axes, head/ffn/vocab dims -> model axis.
+# --------------------------------------------------------------------------
+
+_TLS = threading.local()
+
+
+def _binding():
+    return getattr(_TLS, "act_binding", None)
+
+
+@contextlib.contextmanager
+def activation_binding(**axes):
+    """axes keys: batch, heads, kv_heads, ffn, vocab, expert, state_heads —
+    each a mesh-axis (tuple) or None."""
+    prev = _binding()
+    _TLS.act_binding = axes
+    try:
+        yield
+    finally:
+        _TLS.act_binding = prev
+
+
+def _constrain(x, spec):
+    b = _binding()
+    if b is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def shard_btd(x):
+    """(B, T, D) residual-stream activations."""
+    b = _binding()
+    return x if b is None else _constrain(x, (b["batch"], None, None))
+
+
+def shard_heads(x, kv: bool = False):
+    """(B, T, H, hd) attention activations.
+
+    When the head count does not divide the model axis (smollm 9H,
+    gemma3 8H, deepseek 56H on a 16-way axis), attention would be fully
+    replicated across `model`.  With attn_reshard enabled (batch divides
+    data*model), the BATCH is resharded over the model axis for the
+    attention region instead — a pair of all-to-alls per layer buys a
+    model-axis-fold FLOP/byte reduction (EXPERIMENTS.md #Perf).
+    """
+    b = _binding()
+    if b is None:
+        return x
+    ax = b["kv_heads"] if kv else b["heads"]
+    if ax is None and b.get("attn_reshard"):
+        batch = b["batch"] or ()
+        if b.get("attn_reshard_mode") == "batch" and x.shape[0] > 1:
+            return _constrain(x, ((*batch, "model"), None, None, None))
+        if x.shape[1] % 16 == 0 or x.shape[1] > 1:  # seq reshard
+            return _constrain(x, (batch or None, "model", None, None))
+    return _constrain(x, (b["batch"], None, ax, None))
+
+
+def shard_btf(x):
+    """(B, T, F) MLP hidden."""
+    b = _binding()
+    return x if b is None else _constrain(x, (b["batch"], None, b["ffn"]))
+
+
+def shard_bth(x):
+    """(B, T, H) per-head scalars (mamba dt)."""
+    b = _binding()
+    return x if b is None else _constrain(x, (b["batch"], None, b["state_heads"]))
+
+
+def shard_expert_buf(x):
+    """(E, C, D) MoE dispatch buffers (naive single-buffer path)."""
+    b = _binding()
+    return x if b is None else _constrain(x, (b["expert"], None, None))
+
+
+def shard_moe_buf(x):
+    """(NB, E, C, D) block-structured MoE dispatch buffers: token blocks
+    over the data axes, experts over `model`."""
+    b = _binding()
+    if b is None:
+        return x
+    nb_ax = b["batch"] if x.shape[0] % max(b.get("n_data", 1), 1) == 0 else None
+    return _constrain(x, (nb_ax, b["expert"], None, None))
+
+
+def shard_logits(x):
+    """(B, T, V) or (B, V) logits."""
+    b = _binding()
+    if b is None:
+        return x
+    if x.ndim == 3:
+        return _constrain(x, (b["batch"], None, b["vocab"]))
+    return _constrain(x, (b["batch"], b["vocab"]))
+
+
+def shard_state(x):
+    """(B, H, P, N|P) recurrent state (rwkv / mamba)."""
+    b = _binding()
+    return x if b is None else _constrain(x, (b["batch"], b["state_heads"], None, None))
+
+
+def shard_bthp(x):
+    """(B, T, H, P) ssm head inputs."""
+    b = _binding()
+    return x if b is None else _constrain(x, (b["batch"], None, b["state_heads"], None))
+
+
+def axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+class ShardingRules:
+    """Builds PartitionSpec trees for a (cfg, mesh) pair."""
+
+    def __init__(self, cfg: ModelConfig, mesh, data_axes=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        names = mesh.axis_names
+        if data_axes is None:
+            data_axes = tuple(a for a in names if a != "model")
+        self.data_axes = tuple(data_axes)  # e.g. ("pod", "data") or ("data",)
+        self.n_data = axis_size(mesh, self.data_axes)
+        self.n_model = mesh.shape["model"] if "model" in names else 1
+
+    # -- helpers ------------------------------------------------------------
+
+    def _d(self, dim: int):
+        """FSDP axes if divisible else None."""
+        return self.data_axes if dim % max(self.n_data, 1) == 0 else None
+
+    def _m(self, dim: int):
+        return "model" if dim % max(self.n_model, 1) == 0 else None
+
+    def _heads_shardable(self, n_heads: int) -> bool:
+        return n_heads % max(self.n_model, 1) == 0
+
+    def activation_ctx(self, batch_size: int, seq_len: int = 0):
+        """Context manager binding activation constraints for this mesh."""
+        cfg = self.cfg
+        b_ax = self.data_axes if batch_size % max(self.n_data, 1) == 0 else None
+        m = lambda ok: "model" if ok else None
+        if cfg.ssm_state:
+            state_heads = (cfg.ssm_expand * cfg.d_model) // cfg.ssm_head_dim
+        else:
+            state_heads = cfg.num_heads
+        heads_ok = self._heads_shardable(cfg.num_heads)
+        can_batch = batch_size % max(self.n_data * self.n_model, 1) == 0
+        can_seq = seq_len > 1 and seq_len % max(self.n_model, 1) == 0
+        reshard_ok = (
+            not heads_ok
+            and b_ax is not None
+            and (can_batch or can_seq)
+            and getattr(cfg, "attn_batch_reshard", True)
+        )
+        reshard_mode = "batch" if can_batch else "seq"
+
+        return activation_binding(
+            batch=b_ax,
+            heads=m(heads_ok),
+            kv_heads=m(self._heads_shardable(cfg.num_kv_heads)),
+            ffn=m(cfg.d_ff % max(self.n_model, 1) == 0 and not cfg.num_experts),
+            vocab=m(cfg.vocab_size % max(self.n_model, 1) == 0),
+            expert=m(cfg.num_experts % max(self.n_model, 1) == 0 if cfg.num_experts else False),
+            state_heads=m(state_heads % max(self.n_model, 1) == 0),
+            attn_reshard=reshard_ok,
+            attn_reshard_mode=reshard_mode,
+            n_data=self.n_data,
+            mesh=self.mesh,
+        )
+
+    # -- parameters ----------------------------------------------------------
+
+    def param_specs(self, params) -> dict:
+        cfg = self.cfg
+
+        def leaf_spec(path, leaf):
+            keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+            name = next((k for k in reversed(keys) if isinstance(k, str)), "")
+            stacked = "groups" in keys
+            shape = leaf.shape[1:] if stacked else leaf.shape
+            spec = self._rule(name, shape)
+            if stacked:
+                spec = (None, *spec)
+            return P(*spec)
+
+        return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+    def _rule(self, name: str, shape: tuple) -> tuple:
+        cfg = self.cfg
+        nd = len(shape)
+        if nd <= 1:
+            return (None,) * nd
+        if name == "embed":      # (V, D)
+            return (self._m(shape[0]), self._d(shape[1]))
+        if name == "lm_head":    # (D, V)
+            return (self._d(shape[0]), self._m(shape[1]))
+        if name == "router":     # (D, E)
+            return (self._d(shape[0]), None)
+        if name in ("w_gate", "w_up", "w_down") and nd == 3:  # MoE experts
+            if name == "w_down":   # (E, F, D)
+                return (self._m(shape[0]), None, self._d(shape[2]))
+            return (self._m(shape[0]), self._d(shape[1]), None)  # (E, D, F)
+        if name == "wq":         # (D, H*hd)
+            ok = self._heads_shardable(cfg.num_heads)
+            return (self._d(shape[0]), "model" if ok else None)
+        if name in ("wk", "wv"):  # (D, KV*hd): shard only head-granularly
+            ok = self._heads_shardable(cfg.num_kv_heads)
+            return (self._d(shape[0]), "model" if ok else None)
+        if name == "wo":          # (H*hd, D)
+            ok = self._heads_shardable(cfg.num_heads)
+            return ("model" if ok else None, self._d(shape[1]))
+        if name in ("w_gate", "w_up", "w_ck"):   # (D, F)
+            return (self._d(shape[0]), self._m(shape[1]))
+        if name in ("w_down", "w_cv"):           # (F, D)
+            return (self._m(shape[0]), self._d(shape[1]))
+        if name in ("w_r", "w_k", "w_v", "w_g", "w_cr"):  # (D, D)
+            return (self._d(shape[0]), self._m(shape[1]))
+        if name == "w_o":                        # (D, D) rwkv out
+            return (self._m(shape[0]), self._d(shape[1]))
+        if name == "in_proj":                    # (D, M) mamba
+            return (self._d(shape[0]), None)
+        if name == "out_proj":                   # (d_in, D)
+            return (None, self._d(shape[1]))
+        if name in ("wA",):                      # (D, r)
+            return (self._d(shape[0]), None)
+        if name in ("wB",):                      # (r, D)
+            return (None, self._d(shape[1]))
+        if name == "u":                          # (H, P)
+            return (self._m(shape[0]), None)
+        if name == "conv_w":
+            return (None, None)
+        # fallback: replicate
+        return (None,) * nd
+
+    # -- caches ---------------------------------------------------------------
+
+    def cache_specs(self, cache, batch_size: int, shard_seq_over_data: bool = False):
+        """Specs for a decode cache pytree (model.init_cache structure)."""
+        b_ax = self.data_axes if batch_size % max(self.n_data, 1) == 0 else None
+        seq_ax = ("model",) if not shard_seq_over_data else (*self.data_axes, "model")
+
+        def leaf_spec(path, leaf):
+            keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+            name = next((k for k in reversed(keys) if isinstance(k, str)), "")
+            stacked = "groups" in keys
+            shape = leaf.shape[1:] if stacked else leaf.shape
+            spec = self._cache_rule(name, shape, b_ax, seq_ax)
+            if stacked:
+                spec = (None, *spec)
+            return P(*spec)
+
+        return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+    def _cache_rule(self, name, shape, b_ax, seq_ax):
+        if len(shape) == 0:
+            return ()
+        if name in ("k", "v"):        # (B, S, KV, hd)
+            seq = shape[1]
+            n_seq = 1
+            for a in seq_ax:
+                n_seq *= self.mesh.shape[a]
+            s_spec = seq_ax if seq % n_seq == 0 else None
+            return (b_ax, s_spec, None, None)
+        if name == "state":           # (B, H, P, P) rwkv
+            return (b_ax, self._m(shape[1]), None, None)
+        if name == "ssm":             # (B, H, P, N)
+            return (b_ax, self._m(shape[1]), None, None)
+        if name == "conv":            # (B, K-1, conv_ch)
+            return (b_ax, None, None)
+        if name in ("shift_t", "shift_c"):  # (B, 1, D)
+            return (b_ax, None, None)
+        return (None,) * len(shape)
+
+    # -- batches ----------------------------------------------------------------
+
+    def batch_specs(self, batch_shapes: dict, batch_size: int) -> dict:
+        b_ax = self.data_axes if batch_size % max(self.n_data, 1) == 0 else None
+        out = {}
+        for k, v in batch_shapes.items():
+            nd = len(v.shape)
+            if k == "positions":  # (3, B, S)
+                out[k] = P(None, b_ax, None)
+            elif nd >= 1:
+                out[k] = P(b_ax, *(None,) * (nd - 1))
+            else:
+                out[k] = P()
+        return out
+
+    def repl(self) -> P:
+        return P()

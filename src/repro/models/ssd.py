@@ -1,0 +1,89 @@
+"""Mamba-2 SSD (state-space duality) block for the Zamba2 hybrid.
+
+Per head h (P channels, N state dims), scalar decay per step:
+    S_t = exp(dt_t * A_h) S_{t-1} + dt_t * x_t B_t^T
+    y_t = S_t C_t + D_h x_t
+Chunked computation (chunk Lc): intra-chunk pairwise decays are exact
+(scalar per head, so the (Lc x Lc) decay matrix is stable: all ratios <= 1),
+inter-chunk via a carried (B, H, P, N) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunked(x, dt, A, B_, C, chunk: int = 64, state0=None):
+    """x: (B,T,H,P), dt: (B,T,H) (>0), A: (H,) (<0), B_/C: (B,T,N).
+
+    Single B/C group shared across heads (G=1, as in Mamba-2 defaults).
+    Returns (y (B,T,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, T, H, P = x.shape
+    N = B_.shape[-1]
+    nc = max(1, T // chunk)
+    Lc = T // nc
+    assert nc * Lc == T
+
+    xf = x.reshape(Bsz, nc, Lc, H, P).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    dtf = dt.reshape(Bsz, nc, Lc, H).transpose(1, 0, 3, 2).astype(jnp.float32)
+    Bf = B_.reshape(Bsz, nc, Lc, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+    Cf = C.reshape(Bsz, nc, Lc, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+
+    loga = dtf * A.astype(jnp.float32)[None, None, :, None]  # (nc,B,H,Lc) <= 0
+    cum = jnp.cumsum(loga, axis=-1)                          # inclusive
+    tot = jnp.exp(cum[..., -1:])                             # (nc,B,H,1)
+
+    if state0 is None:
+        state0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    tmask = jnp.tril(jnp.ones((Lc, Lc), bool))
+
+    def step(S, blk):
+        xc, dtc, Bc, Cc, cumc, totc = blk
+        # y_inter[t] = exp(cum[t]) * S_0 C_t
+        SC = jnp.einsum("bhpn,btn->bhtp", S, Cc)
+        y_inter = jnp.exp(cumc)[..., None] * SC
+        # intra: decay(t,s) = exp(cum[t] - cum[s]) for s <= t
+        dmat = jnp.exp(cumc[..., :, None] - cumc[..., None, :])
+        dmat = jnp.where(tmask[None, None], dmat, 0.0)         # (b,h,t,s)
+        bc = jnp.einsum("btn,bsn->bts", Cc, Bc)                # (b,t,s)
+        w = dmat * bc[:, None] * dtc[:, :, None, :]            # (b,h,t,s)
+        y_intra = jnp.einsum("bhts,bhsp->bhtp", w, xc)
+        # state: S' = tot * S + sum_s exp(cum[-1]-cum[s]) dt_s x_s B_s^T
+        decay_s = jnp.exp(cumc[..., -1:] - cumc) * dtc         # (b,h,s)
+        xw = xc * decay_s[..., None]                           # (b,h,s,p)
+        S_new = S * totc[..., None] + jnp.einsum("bhsp,bsn->bhpn", xw, Bc)
+        return S_new, y_inter + y_intra
+
+    S_final, ys = jax.lax.scan(step, state0, (xf, dtf, Bf, Cf, cum, tot))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(Bsz, T, H, P)
+    return y.astype(x.dtype), S_final
+
+
+def ssd_decode(x, dt, A, B_, C, state):
+    """One-step SSD. x: (B,1,H,P), dt: (B,1,H), B_/C: (B,1,N), state (B,H,P,N)."""
+    Bsz = x.shape[0]
+    xf = x[:, 0].astype(jnp.float32)          # (B,H,P)
+    dtf = dt[:, 0].astype(jnp.float32)        # (B,H)
+    Bf = B_[:, 0].astype(jnp.float32)         # (B,N)
+    Cf = C[:, 0].astype(jnp.float32)          # (B,N)
+    a = jnp.exp(dtf * A.astype(jnp.float32)[None])  # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", xf * dtf[..., None], Bf)
+    state = state * a[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cf)
+    return y[:, None].astype(x.dtype), state
+
+
+def causal_conv1d(x, w, prev=None):
+    """Depth-wise causal conv. x: (B, T, C), w: (K, C). prev: (B, K-1, C).
+
+    Returns (y (B, T, C), new_prev (B, K-1, C)) for streaming decode.
+    """
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)  # (B, T+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i][None, None] for i in range(K))
+    new_prev = xp[:, -(K - 1):] if K > 1 else prev
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_prev

@@ -1,0 +1,12 @@
+from repro.optim.adamw import AdamWConfig, init_opt_state, adamw_update
+from repro.optim.schedule import lr_schedule
+from repro.optim.compress import compress_grads, decompress_grads
+
+__all__ = [
+    "AdamWConfig",
+    "init_opt_state",
+    "adamw_update",
+    "lr_schedule",
+    "compress_grads",
+    "decompress_grads",
+]

@@ -1,0 +1,71 @@
+"""AdamW with fp32 master weights and bf16 compute params.
+
+Optimizer state (master, m, v — all fp32) inherits the parameter sharding
+(FSDP over the data axes): with pjit this realizes a ZeRO-3 layout — each
+device holds 1/N of every statistic and XLA inserts the reduce-scatter /
+all-gather pair around the update.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_opt_state(params):
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, opt_state, cfg: AdamWConfig, lr_scale=1.0):
+    """One AdamW step. Returns (new_params(bf16-or-orig-dtype), new_state, gnorm)."""
+    step = opt_state["step"] + 1
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(master, m, v, g):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        master = master - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * master)
+        return master, m, v
+
+    flat_p, treedef = jax.tree.flatten(opt_state["master"])
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_g = treedef.flatten_up_to(grads)
+    out = [upd(p, m, v, g) for p, m, v, g in zip(flat_p, flat_m, flat_v, flat_g)]
+    new_master = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+
+    new_params = jax.tree.map(
+        lambda nm, p: nm.astype(p.dtype), new_master, params
+    )
+    new_state = {"master": new_master, "m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, gnorm

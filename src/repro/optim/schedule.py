@@ -1,0 +1,19 @@
+"""Learning-rate schedules (warmup + cosine decay, constant, rsqrt)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lr_schedule(step, *, warmup: int = 200, total: int = 10_000,
+                kind: str = "cosine", min_frac: float = 0.1):
+    """Returns a multiplier in [min_frac, 1]."""
+    step = jnp.asarray(step, jnp.float32)
+    w = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    if kind == "constant":
+        decay = 1.0
+    elif kind == "rsqrt":
+        decay = jnp.sqrt(jnp.maximum(warmup, 1.0) / jnp.maximum(step, warmup))
+    else:  # cosine
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        decay = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return w * decay

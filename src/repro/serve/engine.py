@@ -1,0 +1,148 @@
+"""Batched serving engine with continuous batching and the paper's metric.
+
+Requests queue with arrival timestamps; the engine admits up to
+`max_batch` requests per decode round.  The interval between a request
+becoming runnable (arrival or previous-token completion) and being
+admitted to compute is the serving-side analogue of the paper's
+scheduling latency — it is collected into the same 200x5 histogram
+(`RunqlatCollector`) and exported to the Data Collection Module, making
+every serving job a first-class "online pod" for the ICO scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metric import RunqlatCollector
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int
+    arrival: float = 0.0
+    tokens: list = dataclasses.field(default_factory=list)
+    enqueue_t: float = 0.0      # when it became runnable (for runqlat)
+    first_token_t: float | None = None
+    done_t: float | None = None
+
+
+class ServeEngine:
+    """Synchronous continuous-batching engine (greedy decoding).
+
+    For simplicity each admitted cohort decodes together (uniform cache
+    length via left-padding to the cohort max prompt length).
+    """
+
+    def __init__(self, cfg, params, max_batch: int = 8, max_seq: int = 512,
+                 latency_unit: float = 1e-3):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.latency_unit = latency_unit  # seconds per histogram latency-unit
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self.runqlat = RunqlatCollector()
+        self._uid = 0
+        self._decode = jax.jit(lambda p, c, b: M.decode_step(cfg, p, c, b))
+        self._prefill = jax.jit(lambda p, b: M.prefill(cfg, p, b))
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        now = time.monotonic()
+        req = Request(self._uid, np.asarray(prompt, np.int32), max_new_tokens,
+                      arrival=now, enqueue_t=now)
+        self.queue.append(req)
+        self._uid += 1
+        return req.uid
+
+    # ------------------------------------------------------------------
+
+    def _admit(self) -> list[Request]:
+        cohort = []
+        now = time.monotonic()
+        while self.queue and len(cohort) < self.max_batch:
+            req = self.queue.popleft()
+            # queueing delay in latency units -> the paper's runqlat metric
+            self.runqlat.add([(now - req.enqueue_t) / self.latency_unit])
+            cohort.append(req)
+        return cohort
+
+    def step(self) -> int:
+        """Process one cohort to completion. Returns #requests finished."""
+        cohort = self._admit()
+        if not cohort:
+            return 0
+        B = len(cohort)
+        S = max(len(r.prompt) for r in cohort)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(cohort):
+            toks[i, S - len(r.prompt):] = r.prompt  # left-pad
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+        logits, cache = self._prefill(self.params, batch)
+        # grow cache to max_seq
+        new_tokens = int(max(r.max_new_tokens for r in cohort))
+        cache = self._grow_cache(cache, B, S + new_tokens)
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        now = time.monotonic()
+        for i, r in enumerate(cohort):
+            r.first_token_t = now
+            r.tokens.append(int(tok[i, 0]))
+        for _ in range(new_tokens - 1):
+            logits, cache = self._decode(self.params, cache, {"token": tok})
+            tok = jnp.argmax(logits, axis=-1)[:, None]
+            now = time.monotonic()
+            for i, r in enumerate(cohort):
+                if len(r.tokens) < r.max_new_tokens:
+                    r.tokens.append(int(tok[i, 0]))
+        now = time.monotonic()
+        for r in cohort:
+            r.done_t = now
+            self.finished.append(r)
+        return len(cohort)
+
+    def _grow_cache(self, cache, B, S):
+        """Re-materialize the prefill cache into a max_seq-sized buffer."""
+        full = M.init_cache(self.cfg, B, S)
+
+        def place(dst, src):
+            if dst.ndim >= 2 and src.ndim == dst.ndim and dst.shape != src.shape:
+                # sequence-extendable buffers: (.., S_small, ..) -> (.., S, ..)
+                sl = tuple(slice(0, s) for s in src.shape)
+                return dst.at[sl].set(src.astype(dst.dtype))
+            return src.astype(dst.dtype) if hasattr(src, "dtype") else src
+
+        merged = jax.tree.map(place, full, cache)
+        merged["len"] = cache["len"]
+        return merged
+
+    def run(self, until_empty: bool = True) -> dict:
+        n = 0
+        while self.queue:
+            n += self.step()
+        return self.stats()
+
+    def stats(self) -> dict:
+        lats = [
+            (r.done_t - r.arrival) for r in self.finished if r.done_t is not None
+        ]
+        ttfts = [
+            (r.first_token_t - r.arrival)
+            for r in self.finished
+            if r.first_token_t is not None
+        ]
+        return {
+            "finished": len(self.finished),
+            "avg_latency": float(np.mean(lats)) if lats else 0.0,
+            "p90_latency": float(np.percentile(lats, 90)) if lats else 0.0,
+            "avg_ttft": float(np.mean(ttfts)) if ttfts else 0.0,
+            "runqlat_avg": self.runqlat.average(),
+            "runqlat_hist": self.runqlat.snapshot(),
+        }

@@ -1,0 +1,6 @@
+from repro.train.train_step import make_train_step, init_train_state
+from repro.train.checkpoint import Checkpointer
+from repro.train.fault import StragglerDetector, StragglerPolicy, Preemptible
+
+__all__ = ["make_train_step", "init_train_state", "Checkpointer",
+           "StragglerDetector", "StragglerPolicy", "Preemptible"]

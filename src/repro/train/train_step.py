@@ -1,0 +1,96 @@
+"""jit-able train step: loss -> grad -> (optional int8-compressed DP
+all-reduce) -> AdamW, with optional microbatch gradient accumulation."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_update, lr_schedule
+from repro.optim.compress import compress_grads, decompress_grads
+
+
+def _split_microbatches(batch: dict, accum: int) -> dict:
+    def split(k, x):
+        if k == "positions":  # (3, B, S) -> (accum, 3, B/a, S)
+            return x.reshape(x.shape[0], accum, -1, *x.shape[2:]).swapaxes(0, 1)
+        return x.reshape(accum, x.shape[0] // accum, *x.shape[1:])
+
+    return {k: split(k, v) for k, v in batch.items()}
+
+
+def make_train_step(
+    cfg,
+    opt_cfg: AdamWConfig | None = None,
+    *,
+    accum: int = 1,
+    remat: bool = True,
+    compress: bool = False,
+    schedule_kwargs: dict | None = None,
+):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    compress=True runs the int8+error-feedback gradient compressor between
+    grad computation and the optimizer (error state lives in opt_state).
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+    sk = schedule_kwargs or {}
+
+    def loss_fn(p, mb):
+        return M.train_loss(cfg, p, mb, remat=remat)
+
+    def step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        else:
+            mbs = _split_microbatches(batch, accum)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(body, (g0, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = {"loss": loss}
+
+        if compress:
+            err = opt_state.get("comp_err")
+            cg, new_err = compress_grads(grads, err)
+            grads = decompress_grads(cg, grads)
+        lr_scale = lr_schedule(opt_state["step"], **sk)
+        new_params, new_opt, gnorm = adamw_update(
+            params, grads, opt_state, opt_cfg, lr_scale
+        )
+        if compress:
+            new_opt["comp_err"] = new_err
+        out_metrics = {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "lr_scale": lr_scale,
+            "step": new_opt["step"],
+        }
+        return new_params, new_opt, out_metrics
+
+    return step
+
+
+def init_train_state(cfg, key, compress: bool = False):
+    from repro.optim import init_opt_state
+
+    params = M.init_params(cfg, key)
+    opt_state = init_opt_state(params)
+    if compress:
+        opt_state["comp_err"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+    return params, opt_state

@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + finiteness; prefill->decode consistency vs the full
+forward (the strongest correctness check for the cache machinery)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import model as M
+
+B, S = 2, 64
+
+
+def _batch(cfg, key, seq=S):
+    if cfg.embed_inputs:
+        b = {
+            "embeds": jax.random.normal(key, (B, seq, cfg.d_model), jnp.float32),
+            "labels": jax.random.randint(key, (B, seq), 0, cfg.vocab_size),
+        }
+        if cfg.mrope_sections:
+            pos = jnp.broadcast_to(jnp.arange(seq)[None, None], (3, B, seq))
+            b["positions"] = pos
+    else:
+        toks = jax.random.randint(key, (B, seq), 0, cfg.vocab_size)
+        b = {"tokens": toks, "labels": toks}
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    loss, metrics = M.train_loss(cfg, params, _batch(cfg, key))
+    assert jnp.isfinite(loss)
+    # random-init loss should be near ln(vocab)
+    assert abs(float(loss) - np.log(cfg.vocab_size)) < 2.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    cfg.validate()
+    n_layers = len(cfg.pattern) * cfg.repeats + len(cfg.tail)
+    assert n_layers == cfg.num_layers
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS if a != "hubert_xlarge"])
+def test_prefill_decode_matches_forward(arch):
+    """decode(prefill(x[:-1]), x[-1]) must equal forward(x) at the last
+    position — validates KV caches, recurrent states, and token shifts."""
+    import dataclasses
+
+    cfg = get_smoke_config(arch)
+    if cfg.num_experts:
+        # capacity dropping is context-length-dependent; give every expert
+        # full capacity so routing is purely per-token (cache semantics are
+        # what this test validates)
+        cfg = dataclasses.replace(
+            cfg, capacity_factor=float(cfg.num_experts) / cfg.experts_per_tok
+        )
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(cfg, key)
+    batch = _batch(cfg, key)
+
+    # full forward logits at last position
+    x, pos = M._embed_in(cfg, params, batch)
+    h, _ = M._run_layers(cfg, params, x, pos, "train")
+    full_logits = M._logits(cfg, params, h)[:, -1]
+
+    # prefill on S-1 then decode token S-1
+    if cfg.embed_inputs:
+        pre = {"embeds": batch["embeds"][:, :-1]}
+        if "positions" in batch:
+            pre["positions"] = batch["positions"][:, :, :-1]
+        dec = {"embeds": batch["embeds"][:, -1:]}
+    else:
+        pre = {"tokens": batch["tokens"][:, :-1]}
+        dec = {"token": batch["tokens"][:, -1:]}
+    _, cache = M.prefill(cfg, params, pre)
+    # re-materialize into a larger buffer (seq-extendable)
+    full = M.init_cache(cfg, B, S + 4)
+    def place(dst, src):
+        if hasattr(dst, "ndim") and dst.ndim >= 2 and dst.shape != src.shape:
+            sl = tuple(slice(0, d) for d in src.shape)
+            return dst.at[sl].set(src.astype(dst.dtype))
+        return src
+    cache_full = jax.tree.map(place, full, cache)
+    cache_full["len"] = cache["len"]
+    dec_logits, _ = M.decode_step(cfg, params, cache_full, dec)
+
+    np.testing.assert_allclose(
+        np.asarray(dec_logits), np.asarray(full_logits), rtol=0.1, atol=0.15
+    )
+
+
+def test_moe_capacity_drops_gracefully():
+    cfg = get_smoke_config("qwen3_moe_235b_a22b")
+    key = jax.random.PRNGKey(2)
+    params = M.init_params(cfg, key)
+    loss, _ = M.train_loss(cfg, params, _batch(cfg, key))
+    assert jnp.isfinite(loss)
+
+
+def test_num_params_counts():
+    cfg = get_config("smollm-135m")
+    n = M.num_params(cfg)
+    assert 1.2e8 < n < 1.5e8, n  # ~135M (tied embeddings)
+    moe = get_config("qwen3-moe-235b-a22b")
+    total, active = M.num_params(moe), M.active_params(moe)
+    assert 2.0e11 < total < 2.7e11, total   # ~235B
+    assert 1.5e10 < active < 3.0e10, active  # ~22B

@@ -1,0 +1,66 @@
+"""Cluster simulator: contention model, motivation result, resource model."""
+import numpy as np
+import pytest
+
+from repro.cluster.motivation import _measure, fit_quality
+from repro.cluster.simulator import Cluster
+from repro.cluster.trace import qps_trace, poisson_arrivals
+from repro.cluster.workloads import Pod
+from repro.cluster.dataset import generate_resource_dataset
+from repro.core.resource_model import ResourcePredictor
+
+
+def test_contention_raises_runqlat_and_rt():
+    lo = _measure(300.0, 2.0, window=40, seed=1)
+    hi = _measure(300.0, 20.0, window=40, seed=1)
+    assert hi[0] > lo[0]          # cpu util rises
+    assert hi[1] > 2 * lo[1]      # runqlat rises sharply (convex)
+    assert hi[2] > lo[2]          # response time rises
+
+
+def test_motivation_runqlat_beats_cpu():
+    """Paper Table I: runqlat correlates with RT better than CPU util."""
+    rows = [_measure(300.0, float(c), window=40, seed=10 + c)
+            for c in range(2, 22, 4)]
+    rows = np.asarray(rows)
+    _, r2_runq = fit_quality(rows[:, 1], rows[:, 2])
+    _, r2_cpu = fit_quality(rows[:, 0], rows[:, 2])
+    assert r2_runq > r2_cpu
+
+
+def test_placement_and_removal():
+    c = Cluster(num_nodes=2, seed=0)
+    p = Pod("web_search", 100.0, True)
+    p.cpu_demand, p.mem_demand = 3.0, 3.0
+    assert c.place(p, 0)
+    assert bool(np.asarray(c.state["on_active"])[0].any())
+    c.remove(p.uid)
+    assert not bool(np.asarray(c.state["on_active"])[0].any())
+
+
+def test_nodes_data_shapes():
+    c = Cluster(num_nodes=3, seed=0)
+    c.rollout(20)
+    d = c.nodes_data()
+    assert d["features"].shape == (3, 45)
+    assert d["online_hists"].shape[0] == 3
+    assert d["cpu_cur"].shape == (3,)
+
+
+def test_trace_statistics():
+    tr = qps_trace(300.0, 4000, seed=0)
+    assert tr.shape == (4000,)
+    assert 0.5 < tr.mean() / 300.0 < 1.5
+    assert tr.min() > 0
+    arr = poisson_arrivals(0.1, 1000, seed=0)
+    assert len(arr) > 50 and np.all(np.diff(arr) >= 0)
+
+
+def test_resource_model_linearity():
+    """Figs. 6-7: QPS->CPU/MEM is linear; predictor recovers it."""
+    qps, cpu, mem = generate_resource_dataset("web_search", seed=0)
+    rp = ResourcePredictor().fit("web_search", qps, cpu, mem)
+    r2c, r2m = rp.r2("web_search", qps, cpu, mem)
+    assert r2c > 0.9 and r2m > 0.9
+    c_pred, m_pred = rp.predict("web_search", 500.0)
+    assert 0 < c_pred < 32 and 0 < m_pred < 64

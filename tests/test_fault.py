@@ -1,0 +1,70 @@
+"""Fault tolerance: straggler detection, checkpoint-restart, preemption."""
+import pytest
+
+from repro.train.checkpoint import Checkpointer
+from repro.train.fault import (
+    Preemptible,
+    StragglerDetector,
+    StragglerPolicy,
+    run_with_restarts,
+)
+
+
+def test_straggler_flags_outlier():
+    d = StragglerDetector(StragglerPolicy(min_samples=3, deadline_factor=3.0))
+    for _ in range(5):
+        assert not d.observe(1.0)["straggler"]
+    out = d.observe(10.0)
+    assert out["straggler"]
+
+
+def test_straggler_eviction_after_repeat_offenses():
+    d = StragglerDetector(StragglerPolicy(min_samples=2, evict_after=2))
+    for _ in range(3):
+        d.observe(1.0)
+    first = d.observe(20.0)
+    second = d.observe(20.0)
+    assert first["straggler"] and not first["evict"]
+    assert second["evict"]
+
+
+def test_straggler_robust_ewma_not_poisoned():
+    d = StragglerDetector(StragglerPolicy(min_samples=2))
+    for _ in range(4):
+        d.observe(1.0)
+    d.observe(100.0)  # one massive outlier
+    assert d.ewma < 2.0  # clipped update
+    assert d.observe(1.0)["straggler"] is False
+
+
+def test_run_with_restarts_resumes_from_checkpoint(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    attempts = []
+
+    def train_loop(state):
+        # restore if restarted
+        start = 0
+        if state == "RESTORE":
+            restored, step = ck.restore({"step": 0})
+            start = int(restored["step"]) + 1
+        attempts.append(start)
+        for step in range(start, 10):
+            ck.save(0, {"step": step})  # overwrite step 0 slot with progress
+            if step == 4 and len(attempts) == 1:
+                raise Preemptible("node lost")
+        return "done"
+
+    result, restarts = run_with_restarts(train_loop, ck)
+    assert result == "done"
+    assert restarts == 1
+    assert attempts == [0, 5]  # resumed after the last checkpointed step
+
+
+def test_run_with_restarts_gives_up(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+
+    def always_dies(state):
+        raise Preemptible()
+
+    with pytest.raises(Preemptible):
+        run_with_restarts(always_dies, ck, max_restarts=2)

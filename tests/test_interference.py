@@ -1,0 +1,81 @@
+"""Eq. (1) node interference and Eq. (3) pod interference properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metric
+from repro.core.interference import (
+    INTF_NORM,
+    InterferenceQuantifier,
+    InterferenceWeights,
+    node_interference,
+    pod_interference,
+)
+
+
+def _hist_with_avg(avg_units: float) -> np.ndarray:
+    """Histogram whose Eq.2 average is a chosen bin left-edge."""
+    h = np.zeros(200)
+    k = int(avg_units // 5)
+    h[k] = 10
+    return h
+
+
+def test_idle_node_zero_interference():
+    on = jnp.zeros((1, 3, 200))
+    off = jnp.zeros((1, 2, 200))
+    assert float(node_interference(on, off)[0]) == 0.0
+
+
+def test_eq1_weighted_sum():
+    on = jnp.asarray([_hist_with_avg(100), _hist_with_avg(200)])[None]
+    off = jnp.asarray([_hist_with_avg(50)])[None]
+    got = float(node_interference(on, off, w_a=2.0, w_b=1.2)[0])
+    want = (2.0 * (100 + 200) + 1.2 * 50) * INTF_NORM
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(1.01, 5.0), st.floats(1.01, 5.0))
+def test_eq1_monotone_in_weights(wa, wb):
+    on = jnp.asarray([_hist_with_avg(100)])[None]
+    off = jnp.asarray([_hist_with_avg(100)])[None]
+    base = float(node_interference(on, off, 1.01, 1.01)[0])
+    more = float(node_interference(on, off, wa, wb)[0])
+    assert more >= base - 1e-9
+
+
+def test_weights_validation():
+    with pytest.raises(ValueError):
+        InterferenceWeights(w_a=0.5)
+    with pytest.raises(ValueError):
+        InterferenceWeights(w_c=-1.0)
+
+
+def test_eq3_uses_predictor_and_prepends_qps():
+    seen = {}
+
+    def fake_model(x):
+        seen["x"] = x
+        return x[:, 0] * 2.0  # 2 * qps
+
+    out = pod_interference(fake_model, 150.0, np.ones((4, 45)), w_c=1.0)
+    assert seen["x"].shape == (4, 46)
+    assert np.allclose(seen["x"][:, 0], 150.0)
+    assert np.allclose(out, 300.0 * INTF_NORM)
+
+
+def test_eq3_clamps_negative_predictions():
+    out = pod_interference(lambda x: -np.ones(x.shape[0]), 10.0, np.ones((2, 45)))
+    assert np.all(out == 0.0)
+
+
+def test_quantifier_end_to_end():
+    q = InterferenceQuantifier(lambda x: np.full(x.shape[0], 500.0))
+    on = np.stack([_hist_with_avg(100)])[None].repeat(3, axis=0)
+    off = np.zeros((3, 1, 200))
+    iv = q.intf_nodes(on, off)
+    assert iv.shape == (3,)
+    pv = q.intf_pod(100.0, np.ones((3, 45)))
+    assert pv.shape == (3,) and np.all(pv > 0)

@@ -1,0 +1,82 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,S,H,hd", [(1, 128, 2, 32), (2, 256, 4, 64), (1, 512, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, S, H, hd, dtype, causal):
+    q = jax.random.normal(KEY, (B, S, H, hd), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H, hd), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, H, hd), dtype)
+    o = ops.flash_attention(q, k, v, causal=causal, q_block=64, kv_block=64)
+    r = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(o, np.float32), np.asarray(r, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("window", [32, 100])
+def test_flash_attention_sliding_window(window):
+    B, S, H, hd = 2, 256, 2, 32
+    q = jax.random.normal(KEY, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, H, hd))
+    o = ops.flash_attention(q, k, v, causal=True, sliding_window=window,
+                            q_block=64, kv_block=64)
+    r = ref.flash_attention_ref(q, k, v, causal=True, sliding_window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,T,H,P", [(1, 64, 2, 16), (2, 128, 4, 32)])
+@pytest.mark.parametrize("chunk", [16, 64])
+def test_wkv_sweep(B, T, H, P, chunk):
+    r = jax.random.normal(KEY, (B, T, H * P))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, T, H * P))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, T, H * P))
+    w = jax.random.uniform(jax.random.fold_in(KEY, 3), (B, T, H * P),
+                           minval=0.85, maxval=0.999)
+    u = jax.random.normal(jax.random.fold_in(KEY, 4), (H, P)) * 0.1
+    o = ops.wkv(r, k, v, w, u, H, chunk=chunk)
+    rr = ref.wkv_ref(r, k, v, w, u, H)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(rr), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,T,H,P,N", [(1, 64, 2, 16, 8), (2, 128, 4, 32, 16)])
+@pytest.mark.parametrize("chunk", [16, 64])
+def test_ssd_sweep(B, T, H, P, N, chunk):
+    x = jax.random.normal(KEY, (B, T, H, P))
+    dt = jax.random.uniform(jax.random.fold_in(KEY, 1), (B, T, H), minval=0.01, maxval=0.2)
+    A = -jax.random.uniform(jax.random.fold_in(KEY, 2), (H,), minval=0.5, maxval=2.0)
+    Bm = jax.random.normal(jax.random.fold_in(KEY, 3), (B, T, N))
+    Cm = jax.random.normal(jax.random.fold_in(KEY, 4), (B, T, N))
+    o = ops.ssd(x, dt, A, Bm, Cm, chunk=chunk)
+    rr = ref.ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(rr), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("S,N,block", [(1, 100, 32), (4, 1000, 512), (3, 513, 512)])
+def test_runqlat_hist_sweep(S, N, block):
+    s = jax.random.uniform(KEY, (S, N), minval=-10, maxval=1200)
+    o = ops.runqlat_hist(s, block=block)
+    r = ref.runqlat_hist_ref(s)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), atol=0)
+    assert np.all(np.asarray(o).sum(-1) == N)  # padding must not leak
+
+
+def test_hist_weights_mask_padding():
+    s = jnp.asarray([[1.0, 10.0, 700.0, 0.0]])
+    w = jnp.asarray([[1.0, 1.0, 1.0, 0.0]])
+    o = ops.runqlat_hist(s, w, block=2)
+    assert float(np.asarray(o).sum()) == 3.0

@@ -1,0 +1,82 @@
+"""Unit + property tests for the runqlat metric (paper Eq. 2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metric
+
+
+def test_histogram_shape_and_mass():
+    s = jnp.array([[0.0, 4.9, 5.0, 994.9, 995.0, 2000.0, -3.0]])
+    h = metric.histogram(s)
+    assert h.shape == (1, 200)
+    assert float(h.sum()) == 7
+    assert float(h[0, 0]) == 3  # 0.0, 4.9 and clamped -3.0
+    assert float(h[0, 1]) == 1  # 5.0
+    assert float(h[0, 198]) == 1  # 994.9
+    assert float(h[0, 199]) == 2  # 995.0 and 2000 overflow
+
+
+def test_avg_matches_paper_formula():
+    h = np.zeros(200)
+    h[3] = 2  # bin 3 -> weight 15
+    h[10] = 1  # bin 10 -> weight 50
+    want = (2 * 15 + 1 * 50) / 3
+    assert abs(metric.avg_runqlat(jnp.asarray(h)) - want) < 1e-5
+
+
+def test_avg_empty_hist_is_zero():
+    assert float(metric.avg_runqlat(jnp.zeros(200))) == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0, 2000), min_size=1, max_size=64))
+def test_histogram_mass_conserved(samples):
+    h = metric.histogram(jnp.asarray([samples]))
+    assert float(h.sum()) == len(samples)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.floats(0, 900), min_size=4, max_size=64),
+    st.floats(10, 90),
+)
+def test_avg_monotonic_under_shift(samples, shift):
+    """Shifting all samples up must not decrease the histogram average."""
+    a = metric.histogram(jnp.asarray([samples]))
+    b = metric.histogram(jnp.asarray([[s + shift for s in samples]]))
+    assert float(metric.avg_runqlat(b[0])) >= float(metric.avg_runqlat(a[0])) - 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(st.floats(0, 990), min_size=1, max_size=32),
+    st.lists(st.floats(0, 990), min_size=1, max_size=32),
+)
+def test_merge_additive(s1, s2):
+    h1 = metric.histogram(jnp.asarray([s1]))
+    h2 = metric.histogram(jnp.asarray([s2]))
+    both = metric.histogram(jnp.asarray([s1 + s2]))
+    assert np.allclose(np.asarray(metric.merge(h1, h2)), np.asarray(both))
+
+
+def test_percentile_ordering():
+    rng = np.random.default_rng(0)
+    h = metric.histogram(jnp.asarray([rng.uniform(0, 900, 500)]))[0]
+    p50 = float(metric.percentile(h, 50))
+    p90 = float(metric.percentile(h, 90))
+    p99 = float(metric.percentile(h, 99))
+    assert p50 <= p90 <= p99
+
+
+def test_collector_streaming():
+    c = metric.RunqlatCollector()
+    c.add([1.0, 6.0])
+    c.add(np.array([995.0]))
+    assert c.count == 3
+    assert c.hist[0] == 1 and c.hist[1] == 1 and c.hist[199] == 1
+    avg = c.average()
+    assert avg == pytest.approx((0 + 5 + 995) / 3, rel=1e-5)
+    c.reset()
+    assert c.count == 0 and c.hist.sum() == 0
