@@ -11,6 +11,7 @@ MODULES = [
     "benchmarks.bench_resource_model",   # Figs 6-7
     "benchmarks.bench_predictors",       # Table II / Figs 8-12
     "benchmarks.bench_schedulers",       # Figs 13-15
+    "benchmarks.bench_control",          # runtime mitigation on/off
     "benchmarks.bench_scheduler_latency",
     "benchmarks.bench_metric_pipeline",
     "benchmarks.bench_kernels",

@@ -2,11 +2,15 @@
 
 Runs identical pod-arrival traces under ICO / RR / HUP / LQP and reports
 online avg/p90/p99 response time plus cross-node CPU/MEM utilization
-standard deviation.
+standard deviation.  ``run_experiment`` optionally runs a
+``repro.control.ControlLoop`` between arrivals (mitigation on/off reruns)
+and, per Algorithm 1, queues rejected pods in a bounded retry queue that is
+re-offered on subsequent ticks instead of dropping them permanently.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 
 import numpy as np
 
@@ -29,6 +33,8 @@ class ExperimentResult:
     mem_util_std: float
     placed: int
     rejected: int
+    queued_retries: int = 0   # placements that succeeded via the retry queue
+    mitigations: int = 0      # control-loop actions applied (0 when off)
 
 
 def train_default_predictor(seed: int = 0, num_placements: int = 250):
@@ -58,6 +64,47 @@ def _arrival_trace(num_pods: int, seed: int):
     return pods, gaps
 
 
+def bursty_trace(
+    num_online: int = 24,
+    num_bursts: int = 5,
+    jobs_per_burst: int = 4,
+    seed: int = 0,
+):
+    """Arrival trace for the runtime-mitigation scenario: a stable fleet of
+    online services, then recurring waves of heavy short offline jobs.
+
+    Initial placement sees a calm cluster, so any scheduler places the
+    online fleet reasonably — the interference only materializes when the
+    bursts land, which is exactly the regime a placement-only scheduler
+    cannot correct and a runtime control loop can.
+    """
+    rng = np.random.default_rng(seed)
+    pods, gaps = [], []
+    for _ in range(num_online):
+        name = rng.choice(W.ONLINE_NAMES)
+        prof = W.ONLINE_PROFILES[name]
+        qps = float(rng.uniform(120, 500))
+        pod = Pod(name, qps, True)
+        pod.cpu_demand = prof.cpu_per_qps * qps + prof.cpu_base
+        pod.mem_demand = prof.mem_per_qps * qps + prof.mem_base
+        pods.append(pod)
+        gaps.append(int(rng.integers(3, 8)))
+    for _ in range(num_bursts):
+        for j in range(jobs_per_burst):
+            name = rng.choice(W.OFFLINE_NAMES)
+            prof = W.OFFLINE_PROFILES[name]
+            # mid-size requests: small enough to pass admission on a loaded
+            # cluster, bursty enough (burst_range up to 2.1x) to hurt later
+            cores = float(prof.cores_choices[-2])
+            pod = Pod(name, 0.0, False, duration=int(rng.integers(120, 240)))
+            pod.cpu_demand = cores
+            pod.mem_demand = cores * prof.mem_per_core
+            pods.append(pod)
+            # jobs inside a burst arrive back-to-back; bursts are spread out
+            gaps.append(2 if j < jobs_per_burst - 1 else int(rng.integers(30, 60)))
+    return pods, gaps
+
+
 def run_experiment(
     scheduler,
     pods: list[Pod],
@@ -65,29 +112,75 @@ def run_experiment(
     num_nodes: int = 12,
     seed: int = 7,
     settle_ticks: int = 40,
+    *,
+    control_loop=None,
+    retry_limit: int = 8,
+    retry_attempts: int = 3,
 ) -> ExperimentResult:
+    """Replay one arrival trace under a scheduler.
+
+    control_loop: optional ``repro.control.ControlLoop``; its ``step`` runs
+        after every rollout window, so mitigation interleaves with the same
+        tick cadence the scheduler sees.
+    retry_limit / retry_attempts: Algorithm 1 queues a pod when no node is
+        feasible; rejected pods are re-offered at each subsequent arrival
+        tick, up to ``retry_attempts`` times, from a queue bounded at
+        ``retry_limit`` (overflow and exhausted pods count as rejected).
+    """
     cluster = Cluster(num_nodes=num_nodes, seed=seed)
     cluster.rollout(30)
     rt_all: list[np.ndarray] = []
     cpu_series, mem_series = [], []
-    placed = rejected = 0
+    placed = rejected = queued_retries = 0
+    retry_q: deque[tuple[Pod, int]] = deque()  # (pod, attempts so far)
+
+    def offer(pod: Pod, data: dict) -> bool:
+        node = scheduler.select_node(pod, data)
+        return node >= 0 and cluster.place(pod, node)
+
+    def drain_retries(data: dict) -> None:
+        nonlocal placed, rejected, queued_retries
+        for _ in range(len(retry_q)):
+            qpod, failed = retry_q.popleft()  # failed = prior re-offers
+            if offer(qpod, data):
+                placed += 1
+                queued_retries += 1
+            elif failed + 1 >= retry_attempts:
+                rejected += 1
+            else:
+                retry_q.append((qpod, failed + 1))
 
     for pod, gap in zip(pods, gaps):
         pod = dataclasses.replace(pod)  # fresh copy per scheduler
+        # one telemetry snapshot per tick: every offer this tick (queued
+        # re-offers + the new arrival) schedules against the same window
         data = cluster.nodes_data()
-        node = scheduler.select_node(pod, data)
-        if node < 0 or not cluster.place(pod, node):
-            rejected += 1
-        else:
+        drain_retries(data)
+        if offer(pod, data):
             placed += 1
+        elif retry_attempts > 0 and len(retry_q) < retry_limit:
+            retry_q.append((pod, 0))
+        else:
+            rejected += 1
         cluster.rollout(gap)
+        # measure BEFORE mitigating: migration frees the source slot, and
+        # sampling afterwards would silently drop the migrated pod's (worst)
+        # samples from this window, biasing the mitigation-on distribution
         rt_all.append(cluster.online_rt_samples())
         cpu_series.append(cluster.last["cpu_util"])
         mem_series.append(cluster.last["mem_util"])
+        if control_loop is not None:
+            control_loop.step(cluster)
 
+    drain_retries(cluster.nodes_data())
+    rejected += len(retry_q)  # still queued at trace end: never placed
     cluster.rollout(settle_ticks)
     rt_all.append(cluster.online_rt_samples())
-    rt = np.concatenate([r for r in rt_all if r.size])
+    if control_loop is not None:
+        control_loop.step(cluster)
+    rt = np.concatenate([r for r in rt_all if r.size] or [np.zeros(0)])
+    if rt.size == 0:
+        rt = np.full(1, np.nan)  # no online pod ever ran
     cpu = np.stack(cpu_series)  # (T, N)
     mem = np.stack(mem_series)
     return ExperimentResult(
@@ -99,6 +192,8 @@ def run_experiment(
         mem_util_std=float((100 * mem).std(axis=1).mean()),
         placed=placed,
         rejected=rejected,
+        queued_retries=queued_retries,
+        mitigations=0 if control_loop is None else control_loop.stats.actions_applied,
     )
 
 

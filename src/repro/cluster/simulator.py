@@ -53,6 +53,17 @@ def _season(t, phase):
                + 0.12 * jnp.sin(4 * jnp.pi * t / TICKS_PER_DAY + 1.7 * phase)
 
 
+def delay_curve(rho, xp=jnp):
+    """M/G/1-PS style delay vs run-queue pressure: convex, explodes near 1.
+
+    The single source of truth for the contention curve — the rollout
+    kernel applies it per tick (xp=jnp, under jit) and the mitigation
+    policy reuses it host-side (xp=np) to estimate action relief, so
+    retuning the curve retunes both.
+    """
+    return RUNQLAT_BASE + RUNQLAT_SCALE * rho**2 / xp.maximum(1.0 - rho, RHO_EPS)
+
+
 @partial(jax.jit, static_argnames=("num_ticks",))
 def _rollout(state, profiles, t0, key, num_ticks: int):
     """Scan num_ticks ticks. Returns (new_state, accumulated telemetry)."""
@@ -100,7 +111,7 @@ def _rollout(state, profiles, t0, key, num_ticks: int):
         threads_total = thr_on.sum(-1) + thr_off.sum(-1) + 2.0
 
         # M/G/1-PS style delay curve: convex in rho, explodes near 1.0.
-        delay = RUNQLAT_BASE + RUNQLAT_SCALE * rho_p**2 / jnp.maximum(1.0 - rho_p, RHO_EPS)
+        delay = delay_curve(rho_p)
         # thread-count pressure adds a second contention path
         delay = delay * (1.0 + 0.15 * jnp.maximum(threads_total / cores - 1.0, 0.0))
         # tick-level lognormal jitter (scheduling is noisy)
@@ -296,8 +307,136 @@ class Cluster:
         return True
 
     def remove(self, uid: int) -> None:
+        if uid not in self._pod_slots:
+            raise KeyError(
+                f"unknown pod uid {uid}: never placed, already removed, or a "
+                f"finished offline job cleared by reconcile()"
+            )
         kind, node, s = self._pod_slots.pop(uid)
         self._set(f"{kind}_active", (node, s), False)
+        if kind == "off":
+            self._clear_off_slot(node, s)
+
+    _OFF_FIELDS = ("off_cores", "off_threads", "off_mem", "off_remaining")
+
+    def _clear_off_slot(self, node: int, s: int) -> None:
+        for name in self._OFF_FIELDS:
+            self._set(name, (node, s), 0)
+        self._set("off_burst", (node, s), 1.0)
+
+    def reconcile(self) -> list[int]:
+        """Clear offline jobs whose run finished (off_remaining hit 0).
+
+        The rollout kernel deactivates finished slots but cannot touch the
+        host-side ``_pod_slots`` map, so without this the map leaks and stale
+        off_cores/off_mem persist in state (harmless to the sim, which masks
+        by off_active, but wrong for any code reading raw state).  Returns
+        the uids of the jobs that were cleared.
+        """
+        off_active = np.asarray(self.state["off_active"])
+        finished = [
+            uid for uid, (kind, node, s) in self._pod_slots.items()
+            if kind == "off" and not off_active[node, s]
+        ]
+        for uid in finished:
+            _, node, s = self._pod_slots.pop(uid)
+            self._clear_off_slot(node, s)
+        return finished
+
+    # ---------------- runtime mitigation primitives ----------------
+
+    _ON_FIELDS = ("on_type", "on_qps_mean", "on_phase")
+
+    def migrate(self, uid: int, dst: int) -> bool:
+        """Move a live pod to another node, preserving its parameters.
+
+        Returns False when the destination has no free slot of the right
+        kind (state is untouched); raises KeyError for unknown uids.
+        """
+        self.reconcile()
+        if uid not in self._pod_slots:
+            raise KeyError(f"cannot migrate unknown pod uid {uid}")
+        kind, src, s = self._pod_slots[uid]
+        if dst < 0 or dst >= self.n:
+            return False
+        if dst == src:
+            return True
+        active = np.asarray(self.state[f"{kind}_active"][dst])
+        free = np.nonzero(~active)[0]
+        if free.size == 0:
+            return False
+        d = int(free[0])
+        fields = self._ON_FIELDS if kind == "on" else self._OFF_FIELDS + ("off_burst",)
+        for name in fields:
+            self._set(name, (dst, d), self.state[name][src, s])
+        self._set(f"{kind}_active", (dst, d), True)
+        self._set(f"{kind}_active", (src, s), False)
+        if kind == "off":
+            self._clear_off_slot(src, s)
+        else:
+            for name in self._ON_FIELDS:
+                self._set(name, (src, s), 0)
+        self._pod_slots[uid] = (kind, dst, d)
+        return True
+
+    def resize(self, uid: int, *, cores: float | None = None,
+               qps: float | None = None) -> bool:
+        """Vertically resize a live pod in place.
+
+        Offline (``cores``): rescales cores/threads/mem by the per-core
+        ratios currently in state and stretches off_remaining by the inverse
+        ratio so total work is conserved (throttling trades latency of the
+        batch job for run-queue relief).  Online (``qps``): retargets the
+        mean QPS, the knob horizontal scale-out splits across replicas.
+        """
+        self.reconcile()
+        if uid not in self._pod_slots:
+            raise KeyError(f"cannot resize unknown pod uid {uid}")
+        kind, node, s = self._pod_slots[uid]
+        if kind == "off":
+            if cores is None or cores <= 0:
+                return False
+            old = float(self.state["off_cores"][node, s])
+            if old <= 0:
+                return False
+            ratio = cores / old
+            for name in ("off_cores", "off_threads", "off_mem"):
+                self._set(name, (node, s), float(self.state[name][node, s]) * ratio)
+            rem = int(self.state["off_remaining"][node, s])
+            self._set("off_remaining", (node, s), max(int(round(rem / ratio)), 1))
+        else:
+            if qps is None or qps < 0:
+                return False
+            self._set("on_qps_mean", (node, s), float(qps))
+        return True
+
+    def pods_on_node(self, node: int) -> list[dict]:
+        """Host-side inventory of live pods on a node (for mitigation policies)."""
+        self.reconcile()
+        out = []
+        for uid, (kind, n_, s) in self._pod_slots.items():
+            if n_ != node:
+                continue
+            if kind == "on":
+                type_id = int(self.state["on_type"][node, s])
+                out.append({
+                    "uid": uid, "kind": "on", "slot": s,
+                    "workload": W.ONLINE_BY_TYPE[type_id],
+                    "qps": float(self.state["on_qps_mean"][node, s]),
+                })
+            else:
+                out.append({
+                    "uid": uid, "kind": "off", "slot": s,
+                    "cores": float(self.state["off_cores"][node, s]),
+                    "burst": float(self.state["off_burst"][node, s]),
+                    "remaining": int(self.state["off_remaining"][node, s]),
+                })
+        return out
+
+    def active_pod_count(self) -> int:
+        """Number of active slots across the cluster (invariant checks)."""
+        return int(np.asarray(self.state["on_active"]).sum()
+                   + np.asarray(self.state["off_active"]).sum())
 
     # ---------------- simulation ----------------
 
@@ -327,6 +466,7 @@ class Cluster:
                 else:
                     merged[key] = sum(vals[1:], vals[0]) / len(vals)
         self.last = jax.tree.map(np.asarray, merged)
+        self.reconcile()
         return self.last
 
     # ---------------- Data Collection Module ----------------

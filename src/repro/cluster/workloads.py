@@ -80,6 +80,7 @@ OFFLINE_PROFILES = {
 
 ONLINE_NAMES = list(ONLINE_PROFILES)
 OFFLINE_NAMES = list(OFFLINE_PROFILES)
+ONLINE_BY_TYPE = {p.type_id: p.name for p in ONLINE_PROFILES.values()}
 
 
 def online_arrays():

@@ -1,0 +1,110 @@
+"""Typed mitigation actions with cost estimates.
+
+Each action targets one hotspot node and knows how to apply itself to the
+cluster simulator.  ``predicted_reduction`` is the policy's estimate of the
+node runqlat reduction (latency units) the action buys; ``cost`` is in
+abstract budget units the policy spends per control invocation:
+
+  * evict-offline   — lost batch work, proportional to the job's cores
+  * migrate-online  — connection draining / state transfer, per migration
+  * scale-out       — replica startup (image pull, warmup), most expensive
+  * vertical-resize — a cgroup quota write, cheapest
+
+``apply`` returns True only when the simulator accepted the mutation; a
+pod that finished or was removed between planning and acting makes the
+action a no-op rather than an error.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.cluster.workloads import Pod, ONLINE_PROFILES
+
+
+@dataclasses.dataclass
+class Action:
+    """Base mitigation action against one hotspot node."""
+
+    node: int
+    cost: float = 0.0
+    predicted_reduction: float = 0.0
+
+    kind = "noop"
+
+    def apply(self, cluster) -> bool:
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return (f"{self.kind}(node={self.node}, cost={self.cost:.2f}, "
+                f"pred_reduction={self.predicted_reduction:.1f})")
+
+
+@dataclasses.dataclass
+class EvictOffline(Action):
+    """Kill an offline batch job on the hotspot; its work is lost."""
+
+    uid: int = -1
+    kind = "evict_offline"
+
+    def apply(self, cluster) -> bool:
+        try:
+            cluster.remove(self.uid)
+        except KeyError:
+            return False
+        return True
+
+
+@dataclasses.dataclass
+class MigrateOnline(Action):
+    """Live-migrate an online service to a less interfered node."""
+
+    uid: int = -1
+    dst: int = -1
+    kind = "migrate_online"
+
+    def apply(self, cluster) -> bool:
+        try:
+            return cluster.migrate(self.uid, self.dst)
+        except KeyError:
+            return False
+
+
+@dataclasses.dataclass
+class ScaleOut(Action):
+    """Horizontal scale-out: split an online service's QPS with a new
+    replica on another node, halving the pressure it exerts locally."""
+
+    uid: int = -1
+    workload: str = ""
+    dst: int = -1
+    replica_qps: float = 0.0
+    kind = "scale_out"
+
+    def apply(self, cluster) -> bool:
+        prof = ONLINE_PROFILES[self.workload]
+        replica = Pod(self.workload, self.replica_qps, True)
+        replica.cpu_demand = prof.cpu_per_qps * self.replica_qps + prof.cpu_base
+        replica.mem_demand = prof.mem_per_qps * self.replica_qps + prof.mem_base
+        if not cluster.place(replica, self.dst):
+            return False
+        try:
+            return cluster.resize(self.uid, qps=self.replica_qps)
+        except KeyError:
+            # original vanished mid-flight: roll the replica back
+            cluster.remove(replica.uid)
+            return False
+
+
+@dataclasses.dataclass
+class VerticalResize(Action):
+    """Throttle an offline job's cores (work conserved: it runs longer)."""
+
+    uid: int = -1
+    new_cores: float = 0.0
+    kind = "vertical_resize"
+
+    def apply(self, cluster) -> bool:
+        try:
+            return cluster.resize(self.uid, cores=self.new_cores)
+        except KeyError:
+            return False

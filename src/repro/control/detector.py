@@ -1,0 +1,101 @@
+"""Streaming hotspot detector over per-node runqlat telemetry.
+
+The Data Collection Module already emits, every rollout window, one
+Eq.(1)-style 200-bin runqlat histogram per node.  The detector folds those
+into an exponentially-decayed histogram per node (so quantile estimates
+track the recent past, not the whole run) and maintains a one-sided
+CUSUM drift statistic on the decayed average:
+
+    cusum_t = max(0, cusum_{t-1} + (avg_t - mu_t - slack))
+
+where ``mu`` is a slow EWMA baseline of the node's average runqlat.  A node
+is flagged as a hotspot when its CUSUM crosses the drift threshold (a
+sustained upward shift) or its decayed p95 crosses an absolute ceiling (an
+acute spike).  Flagging resets the node's CUSUM (hysteresis: one drift
+incident yields one flag); consumers that act on a slower cadence than
+they poll keep un-acted flags pending themselves (see ControlLoop).
+
+The whole update — decay, quantiles, baseline, CUSUM, flags — is a single
+jit'd call over all N nodes; there is no per-node Python loop, so the
+detector scales to thousands of nodes exactly like the scheduler hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metric
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectorConfig:
+    decay: float = 0.5        # per-update decay of the accumulated histogram
+    baseline_alpha: float = 0.05  # EWMA rate of the drift baseline mu
+    slack: float = 8.0        # CUSUM allowance (latency units above baseline)
+    drift_threshold: float = 60.0  # cumulative drift (latency units) to flag
+    quantile: float = 95.0    # tracked tail quantile
+    abs_threshold: float = 400.0   # acute p-quantile ceiling (latency units)
+    warmup: int = 2           # updates before flags are allowed
+
+
+@jax.jit
+def _detector_update(hist, mu, cusum, steps, node_hists, decay, alpha, slack,
+                     drift_thr, q, abs_thr, warmup):
+    """One detector step for all nodes at once.
+
+    hist (N, 200), mu (N,), cusum (N,), steps () int32; node_hists (N, 200)
+    fresh counts from the last telemetry window.  Returns the new state plus
+    the hotspot mask and a diagnostics dict.
+    """
+    hist = hist * decay + node_hists
+    avg = metric.avg_runqlat(hist)
+    p_tail = metric.percentile(hist, q)
+
+    # first observation seeds the baseline; afterwards it moves slowly so a
+    # genuine drift accumulates in the CUSUM before the baseline absorbs it
+    mu = jnp.where(steps == 0, avg, (1.0 - alpha) * mu + alpha * avg)
+    cusum = jnp.maximum(cusum + (avg - mu - slack), 0.0)
+
+    hot = (cusum > drift_thr) | (p_tail > abs_thr)
+    hot = hot & (steps >= warmup)
+    # hysteresis: a flag consumes the accumulated drift, so a node must
+    # re-accumulate before flagging again (the acute p_tail path still
+    # refires); the ControlLoop keeps un-acted flags pending across an
+    # interval skip so incidents aren't lost to acting cadence
+    cusum = jnp.where(hot, 0.0, cusum)
+
+    diag = {"avg": avg, "p_tail": p_tail, "mu": mu, "cusum": cusum}
+    return hist, mu, cusum, steps + 1, hot, diag
+
+
+class StreamingDetector:
+    """Host-side wrapper owning the detector state for one cluster."""
+
+    def __init__(self, num_nodes: int, config: DetectorConfig | None = None):
+        self.cfg = config or DetectorConfig()
+        self.n = num_nodes
+        self.reset()
+
+    def reset(self) -> None:
+        self.hist = jnp.zeros((self.n, metric.NUM_BINS), jnp.float32)
+        self.mu = jnp.zeros((self.n,), jnp.float32)
+        self.cusum = jnp.zeros((self.n,), jnp.float32)
+        self.steps = jnp.int32(0)
+        self.last_diag: dict | None = None
+
+    def update(self, node_hists) -> np.ndarray:
+        """Feed one window of per-node histograms; returns hotspot mask (N,)."""
+        c = self.cfg
+        self.hist, self.mu, self.cusum, self.steps, hot, diag = _detector_update(
+            self.hist, self.mu, self.cusum, self.steps,
+            jnp.asarray(node_hists, jnp.float32),
+            c.decay, c.baseline_alpha, c.slack, c.drift_threshold,
+            c.quantile, c.abs_threshold, c.warmup,
+        )
+        self.last_diag = {k: np.asarray(v) for k, v in diag.items()}
+        return np.asarray(hot)
+

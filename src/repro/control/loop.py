@@ -1,0 +1,131 @@
+"""Closed-loop controller: detect hotspots, plan mitigations, act.
+
+``ControlLoop.step(cluster)`` consumes the Data Collection Module output
+for the last telemetry window, feeds the per-node runqlat histograms to the
+streaming detector (one jit'd call over all nodes), and — every
+``interval``-th invocation with at least one flagged node — asks the
+mitigation policy for a budgeted action plan and applies it.
+
+``run(cluster, num_ticks, k)`` interleaves the loop with
+``Cluster.rollout`` every ``k`` ticks for standalone use; experiment
+drivers that own the rollout cadence (``run_experiment``) just call
+``step`` at their own tick boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.control.actions import Action
+from repro.control.detector import DetectorConfig, StreamingDetector
+from repro.control.policy import MitigationPolicy, PolicyConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlLoopConfig:
+    interval: int = 1      # act on every interval-th step() call
+    cooldown: int = 2      # steps a node is left alone after being acted on
+    uid_cooldown: int = 4  # steps a pod is left alone after being acted on
+    detector: DetectorConfig = dataclasses.field(default_factory=DetectorConfig)
+    policy: PolicyConfig = dataclasses.field(default_factory=PolicyConfig)
+
+
+@dataclasses.dataclass
+class ControlStats:
+    steps: int = 0
+    hotspots_flagged: int = 0
+    actions_planned: int = 0
+    actions_applied: int = 0
+    by_kind: dict = dataclasses.field(default_factory=dict)
+
+
+class ControlLoop:
+    """Runtime interference-mitigation controller for one cluster."""
+
+    def __init__(self, quantifier, config: ControlLoopConfig | None = None):
+        self.cfg = config or ControlLoopConfig()
+        self.policy = MitigationPolicy(quantifier, self.cfg.policy)
+        self.detector: StreamingDetector | None = None
+        self.stats = ControlStats()
+        self.history: list[dict] = []
+        self._last_acted: dict[int, int] = {}      # node -> step of last action
+        self._uid_last_acted: dict[int, int] = {}  # pod uid -> step (anti-ping-pong)
+        self._pending: dict[int, int] = {}         # hot node -> step flagged
+
+    def step(self, cluster) -> list[Action]:
+        """One control iteration; returns the actions actually applied."""
+        if self.detector is None or self.detector.n != cluster.n:
+            self.detector = StreamingDetector(cluster.n, self.cfg.detector)
+            # node/pod ids from another cluster are stale
+            self._last_acted.clear()
+            self._uid_last_acted.clear()
+            self._pending.clear()
+        data = cluster.nodes_data()
+        node_hists = data["online_hists"].sum(1) + data["offline_hists"].sum(1)
+        hot = self.detector.update(node_hists)
+        self.stats.steps += 1
+        self.stats.hotspots_flagged += int(hot.sum())
+
+        # flags consumed on a slower cadence than they are produced stay
+        # pending for one acting interval, so interval > 1 can't lose them.
+        # Flags raised while a node is in post-action cooldown DO expire:
+        # that is deliberate hysteresis — the node was just mitigated, and
+        # if it is still genuinely hot the drift re-accumulates (or the
+        # acute p-tail path refires) once telemetry reflects the action
+        for node in np.nonzero(hot)[0]:
+            self._pending[int(node)] = self.stats.steps
+        self._pending = {n: s for n, s in self._pending.items()
+                         if self.stats.steps - s < self.cfg.interval}
+
+        # a freshly-mitigated node gets cooldown steps for its telemetry to
+        # reflect the action before we pile on more mitigations (anti-thrash)
+        actionable = np.zeros(cluster.n, bool)
+        actionable[list(self._pending)] = True
+        for node, step in self._last_acted.items():
+            if self.stats.steps - step < self.cfg.cooldown:
+                actionable[node] = False
+
+        applied: list[Action] = []
+        if actionable.any() and self.stats.steps % self.cfg.interval == 0:
+            recently_acted = frozenset(
+                uid for uid, step in self._uid_last_acted.items()
+                if self.stats.steps - step < self.cfg.uid_cooldown
+            )
+            plan = self.policy.plan(cluster, data, actionable,
+                                    exclude_uids=recently_acted)
+            self.stats.actions_planned += len(plan)
+            for action in plan:
+                if action.apply(cluster):
+                    applied.append(action)
+                    self.stats.actions_applied += 1
+                    self.stats.by_kind[action.kind] = (
+                        self.stats.by_kind.get(action.kind, 0) + 1
+                    )
+                    self._last_acted[action.node] = self.stats.steps
+                    self._pending.pop(action.node, None)
+                    uid = getattr(action, "uid", -1)
+                    if uid >= 0:
+                        self._uid_last_acted[uid] = self.stats.steps
+        if hot.any() or applied:
+            self.history.append({
+                "step": self.stats.steps,
+                "hot_nodes": np.nonzero(hot)[0].tolist(),
+                "applied": [a.describe() for a in applied],
+            })
+        return applied
+
+    def run(self, cluster, num_ticks: int, k: int | None = None) -> ControlStats:
+        """Interleave rollout and control every ~k ticks (standalone driver).
+
+        rollout rounds tick counts up to Cluster.CHUNK multiples, so progress
+        is tracked via the simulator clock, not the requested k.
+        """
+        k = k or cluster.CHUNK
+        done = 0
+        while done < num_ticks:
+            t0 = cluster.t
+            cluster.rollout(min(k, num_ticks - done))
+            done += int(cluster.t - t0)
+            self.step(cluster)
+        return self.stats

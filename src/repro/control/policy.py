@@ -1,0 +1,195 @@
+"""Mitigation policy: rank candidate actions per hotspot by predicted
+runqlat reduction under a migration-budget constraint.
+
+For every flagged node the policy enumerates one candidate of each action
+type (evict the heaviest offline job, throttle it instead, migrate the
+hottest online service, scale it out) and estimates the runqlat reduction
+each would buy:
+
+  * source-side relief comes from the same M/G/1-PS delay curve the
+    simulator uses — removing c cores of (burst-weighted) pressure from a
+    node at pressure rho is worth delay(rho) - delay(rho - c/cores);
+  * pod-side effects reuse the Interference Quantification Module: the
+    Random Forest behind Eq. (3) predicts the avg runqlat an online pod
+    would see on each candidate destination, so migration destinations are
+    chosen by argmin predicted interference, exactly like initial placement.
+
+Candidates across all hotspots are pooled, scored by
+``predicted_reduction - cost_weight * cost``, and applied greedily until
+the per-invocation budget is exhausted.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.cluster import simulator as sim
+from repro.cluster.workloads import ONLINE_PROFILES
+from repro.core import metric
+from repro.control.actions import (
+    Action,
+    EvictOffline,
+    MigrateOnline,
+    ScaleOut,
+    VerticalResize,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    budget: float = 16.0          # cost units spendable per control invocation
+    cost_weight: float = 1.0      # latency units one cost unit must buy
+    evict_cost_per_core: float = 0.8
+    migrate_cost: float = 3.0
+    scale_out_cost: float = 5.0
+    resize_cost: float = 0.5
+    throttle_frac: float = 0.5    # vertical resize shrinks cores to this
+    cpu_threshold: float = 0.70   # destination feasibility thresholds match the
+    mem_threshold: float = 0.80   # scheduler's Eq. (5)/(6) cutoffs
+    # Unlike admission, destination demand is NOT headroom-inflated by
+    # default (w_d = w_e = 1): runtime rebalancing moves load the cluster
+    # is already carrying, and the scenario sweep shows that inflating it
+    # (set these to the scheduler's 1.2 to forbid anything ICO would
+    # reject) blocks enough good destinations to concentrate migrations
+    # on the few coldest nodes and worsen p99.
+    w_d: float = 1.0
+    w_e: float = 1.0
+    max_actions_per_node: int = 2
+    min_scale_qps: float = 150.0  # don't split a service below this per replica
+    migrate_margin: float = 15.0  # min predicted runqlat gap (src - dst, latency
+                                  # units) before moving a pod is worth the churn
+
+
+def node_delay_curve(rho: np.ndarray) -> np.ndarray:
+    """The simulator's M/G/1-PS delay curve, reused as the relief model."""
+    return sim.delay_curve(np.asarray(rho, np.float64), xp=np)
+
+
+class MitigationPolicy:
+    """Plans (does not apply) mitigation actions for flagged hotspots."""
+
+    def __init__(self, quantifier, config: PolicyConfig | None = None):
+        self.q = quantifier
+        self.cfg = config or PolicyConfig()
+
+    # -------- helpers --------
+
+    def _pressure(self, cluster, data, node: int, pods: list[dict]) -> float:
+        """Burst-weighted run-queue pressure of a node (peak, not average)."""
+        rho = float(data["cpu_cur"][node] / data["cpu_sum"][node])
+        extra = sum(p["cores"] * (p["burst"] - 1.0) for p in pods
+                    if p["kind"] == "off")
+        return rho + extra / float(data["cpu_sum"][node])
+
+    def _relief(self, rho: float, dcores: float, cores: float) -> float:
+        return float(node_delay_curve(rho) - node_delay_curve(rho - dcores / cores))
+
+    def _destinations(self, data, hot: np.ndarray, cpu_pod: float,
+                      mem_pod: float, free_mask: np.ndarray) -> np.ndarray:
+        """Feasible, non-hot destination nodes for a pod of given demand."""
+        cfg = self.cfg
+        cpu_ok = (data["cpu_cur"] + cfg.w_d * cpu_pod) / data["cpu_sum"] <= cfg.cpu_threshold
+        mem_ok = (data["mem_cur"] + cfg.w_e * mem_pod) / data["mem_sum"] <= cfg.mem_threshold
+        return np.nonzero(cpu_ok & mem_ok & ~hot & free_mask)[0]
+
+    # -------- planning --------
+
+    def plan(self, cluster, data, hot, exclude_uids=frozenset()) -> list[Action]:
+        """exclude_uids: pods recently acted on (per-pod anti-ping-pong)."""
+        hot = np.asarray(hot, bool)
+        candidates: list[Action] = []
+        for node in np.nonzero(hot)[0]:
+            candidates.extend(
+                self._candidates(cluster, data, int(node), hot, exclude_uids)
+            )
+
+        candidates = [a for a in candidates
+                      if a.predicted_reduction - self.cfg.cost_weight * a.cost > 0]
+        candidates.sort(
+            key=lambda a: a.predicted_reduction - self.cfg.cost_weight * a.cost,
+            reverse=True,
+        )
+        chosen, spent, per_node = [], 0.0, {}
+        used_uids: set[int] = set()
+        for a in candidates:
+            if spent + a.cost > self.cfg.budget:
+                continue
+            if per_node.get(a.node, 0) >= self.cfg.max_actions_per_node:
+                continue
+            # one action per pod: migrate+scale-out of the same victim (or
+            # evict+resize of the same job) conflict and double-count relief
+            uid = getattr(a, "uid", -1)
+            if uid in used_uids:
+                continue
+            chosen.append(a)
+            spent += a.cost
+            per_node[a.node] = per_node.get(a.node, 0) + 1
+            used_uids.add(uid)
+        return chosen
+
+    def _candidates(self, cluster, data, node: int, hot: np.ndarray,
+                    exclude_uids=frozenset()) -> list[Action]:
+        cfg = self.cfg
+        pods = cluster.pods_on_node(node)
+        eligible = [p for p in pods if p["uid"] not in exclude_uids]
+        offline = [p for p in eligible if p["kind"] == "off"]
+        online = [p for p in eligible if p["kind"] == "on"]
+        cores = float(data["cpu_sum"][node])
+        rho_p = self._pressure(cluster, data, node, pods)  # all pods press
+        out: list[Action] = []
+
+        # offline offenders, heaviest pressure source (cores x burst) first;
+        # each contributes an evict and a throttle candidate so the greedy
+        # pass can combine several cheap throttles or one decisive eviction
+        offline.sort(key=lambda p: p["cores"] * p["burst"], reverse=True)
+        for job in offline[:cfg.max_actions_per_node + 1]:
+            dcores = job["cores"] * job["burst"]
+            out.append(EvictOffline(
+                node=node, uid=job["uid"],
+                cost=cfg.evict_cost_per_core * job["cores"],
+                predicted_reduction=self._relief(rho_p, dcores, cores),
+            ))
+            stretch = job["remaining"] * (1.0 / cfg.throttle_frac - 1.0)
+            out.append(VerticalResize(
+                node=node, uid=job["uid"],
+                new_cores=job["cores"] * cfg.throttle_frac,
+                cost=cfg.resize_cost + 0.002 * stretch,
+                predicted_reduction=self._relief(
+                    rho_p, dcores * (1.0 - cfg.throttle_frac), cores),
+            ))
+
+        if online:
+            victim = max(online, key=lambda p: p["qps"])
+            prof = ONLINE_PROFILES[victim["workload"]]
+            cpu_pod = prof.cpu_per_qps * victim["qps"] + prof.cpu_base
+            mem_pod = prof.mem_per_qps * victim["qps"] + prof.mem_base
+            on_free = ~np.asarray(cluster.state["on_active"]).all(axis=1)
+            # Eq.(3) prediction on every node at once: latency units
+            pred = np.asarray(
+                self.q.intf_pod(victim["qps"], data["features"])
+            ) * metric.OVERFLOW_EDGE
+            dsts = self._destinations(data, hot, cpu_pod, mem_pod, on_free)
+            if dsts.size:
+                dst = int(dsts[np.argmin(pred[dsts])])
+                # the pod rides along: only move it when the model predicts
+                # a real gap, else migration is churn that stacks load on
+                # whichever node happens to be in a seasonal trough
+                if pred[node] - pred[dst] > cfg.migrate_margin:
+                    out.append(MigrateOnline(
+                        node=node, uid=victim["uid"], dst=dst,
+                        cost=cfg.migrate_cost,
+                        predicted_reduction=self._relief(rho_p, cpu_pod, cores)
+                        + (pred[node] - pred[dst]),
+                    ))
+                half = victim["qps"] / 2.0
+                if half >= cfg.min_scale_qps:
+                    cpu_half = prof.cpu_per_qps * half
+                    out.append(ScaleOut(
+                        node=node, uid=victim["uid"], workload=victim["workload"],
+                        dst=dst, replica_qps=half,
+                        cost=cfg.scale_out_cost,
+                        predicted_reduction=self._relief(rho_p, cpu_half, cores)
+                        + 0.3 * max(pred[node] - pred[dst], 0.0),
+                    ))
+        return out

@@ -8,6 +8,10 @@ Modules:
   resource_model  -- QPS -> (CPU, MEM) linear predictor (Figs. 6-7)
   scheduler       -- ICO Algorithm 1 with Eq. (4)-(6) scoring
   baselines       -- RR / HUP (Eq. 7) / LQP comparison schedulers
+
+The runtime mitigation control plane (``repro.control``: detect -> rank ->
+act over a live cluster) is re-exported here lazily so callers can write
+``from repro.core import ControlLoop`` without an import cycle.
 """
 from repro.core import metric
 from repro.core.interference import (
@@ -19,6 +23,21 @@ from repro.core.interference import (
 from repro.core.resource_model import ResourcePredictor
 from repro.core.scheduler import ICOScheduler, SchedulerConfig
 from repro.core.baselines import RoundRobinScheduler, HUPScheduler, LQPScheduler
+
+_CONTROL_EXPORTS = (
+    "ControlLoop",
+    "ControlLoopConfig",
+    "ControlStats",
+    "StreamingDetector",
+    "DetectorConfig",
+    "MitigationPolicy",
+    "PolicyConfig",
+    "Action",
+    "EvictOffline",
+    "MigrateOnline",
+    "ScaleOut",
+    "VerticalResize",
+)
 
 __all__ = [
     "metric",
@@ -32,4 +51,13 @@ __all__ = [
     "RoundRobinScheduler",
     "HUPScheduler",
     "LQPScheduler",
+    *_CONTROL_EXPORTS,
 ]
+
+
+def __getattr__(name: str):
+    if name in _CONTROL_EXPORTS:
+        import repro.control as control
+
+        return getattr(control, name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

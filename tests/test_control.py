@@ -1,0 +1,306 @@
+"""Runtime mitigation control plane: detector, actions, policy, simulator
+primitives (migrate/resize/reconcile), retry queue, and the closed loop."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.cluster.experiment import bursty_trace, run_experiment
+from repro.cluster.simulator import Cluster
+from repro.cluster.workloads import OFFLINE_PROFILES, Pod
+from repro.control import (
+    ControlLoop,
+    ControlLoopConfig,
+    DetectorConfig,
+    EvictOffline,
+    MitigationPolicy,
+    PolicyConfig,
+    StreamingDetector,
+    VerticalResize,
+)
+from repro.core import metric
+from repro.core.interference import InterferenceQuantifier
+from repro.core.scheduler import ICOScheduler
+
+
+def _hists(n_nodes, level, rng):
+    """Per-node histograms of gamma samples with the given mean level."""
+    samples = rng.gamma(2.0, np.asarray(level)[:, None] / 2.0, (n_nodes, 64))
+    return np.stack([np.histogram(s, bins=200, range=(0, 1000))[0] for s in samples])
+
+
+def _cheap_quantifier():
+    # predicted pod runqlat := node's current runqlat_avg feature
+    return InterferenceQuantifier(lambda X: X[:, 21])
+
+
+def _online_pod(qps=300.0, name="web_search"):
+    p = Pod(name, qps, True)
+    p.cpu_demand, p.mem_demand = 0.022 * qps + 0.8, 0.011 * qps + 2.0
+    return p
+
+
+def _offline_pod(cores=12.0, duration=500, name="graph_analytics"):
+    p = Pod(name, 0.0, False, duration=duration)
+    p.cpu_demand = cores
+    p.mem_demand = cores * OFFLINE_PROFILES[name].mem_per_core
+    return p
+
+
+# ---------------- detector ----------------
+
+def test_detector_flags_step_in_runqlat():
+    rng = np.random.default_rng(0)
+    det = StreamingDetector(4, DetectorConfig())
+    steady = [20.0, 25.0, 15.0, 22.0]
+    for _ in range(6):
+        hot = det.update(_hists(4, steady, rng))
+        assert not hot.any()          # steady load never flags
+    stepped = [20.0, 600.0, 15.0, 22.0]  # node 1 drifts hard
+    flagged = np.zeros(4, bool)
+    for _ in range(4):
+        flagged |= det.update(_hists(4, stepped, rng))
+    assert flagged[1]
+    assert not flagged[[0, 2, 3]].any()  # only the stepped node
+
+
+def test_detector_single_jitted_call_tracks_quantiles():
+    rng = np.random.default_rng(1)
+    det = StreamingDetector(3)
+    det.update(_hists(3, [50.0, 200.0, 10.0], rng))
+    diag = det.last_diag
+    # decayed quantile estimates order with the underlying load
+    assert diag["p_tail"][1] > diag["p_tail"][0] > diag["p_tail"][2]
+    assert diag["avg"].shape == (3,)
+
+
+# ---------------- simulator primitives ----------------
+
+def test_migrate_preserves_state_invariants():
+    c = Cluster(num_nodes=3, seed=0)
+    on, off = _online_pod(400.0), _offline_pod(8.0)
+    assert c.place(on, 0) and c.place(off, 0)
+    before = c.active_pod_count()
+
+    assert c.migrate(on.uid, 1)
+    assert c.active_pod_count() == before  # conserved
+    assert c._pod_slots[on.uid][1] == 1
+    assert not np.asarray(c.state["on_active"])[0].any()  # src slot freed
+    dst_slot = c._pod_slots[on.uid][2]
+    assert float(c.state["on_qps_mean"][1, dst_slot]) == 400.0
+
+    assert c.migrate(off.uid, 2)
+    assert c.active_pod_count() == before
+    assert float(np.asarray(c.state["off_cores"])[0].sum()) == 0.0  # no stale src
+    assert float(np.asarray(c.state["off_cores"])[2].sum()) == 8.0
+
+    with pytest.raises(KeyError):
+        c.migrate(999, 1)
+
+
+def test_migrate_full_destination_is_noop():
+    c = Cluster(num_nodes=2, seed=0)
+    from repro.cluster.simulator import S_ON
+    for _ in range(S_ON):
+        assert c.place(_online_pod(100.0), 1)
+    p = _online_pod(200.0)
+    assert c.place(p, 0)
+    before = c.active_pod_count()
+    assert not c.migrate(p.uid, 1)          # node 1 has no free slot
+    assert c._pod_slots[p.uid][1] == 0      # state untouched
+    assert c.active_pod_count() == before
+
+
+def test_resize_conserves_offline_work():
+    c = Cluster(num_nodes=1, seed=0)
+    off = _offline_pod(12.0, duration=400)
+    assert c.place(off, 0)
+    _, n, s = c._pod_slots[off.uid]
+    mem0 = float(c.state["off_mem"][n, s])
+    assert c.resize(off.uid, cores=6.0)
+    assert float(c.state["off_cores"][n, s]) == pytest.approx(6.0)
+    assert float(c.state["off_mem"][n, s]) == pytest.approx(mem0 / 2)
+    assert int(c.state["off_remaining"][n, s]) == 800  # half cores, double time
+
+    on = _online_pod(300.0)
+    assert c.place(on, 0)
+    assert c.resize(on.uid, qps=150.0)
+    _, n, s = c._pod_slots[on.uid]
+    assert float(c.state["on_qps_mean"][n, s]) == 150.0
+
+
+def test_reconcile_clears_finished_offline_jobs():
+    c = Cluster(num_nodes=1, seed=0)
+    off = _offline_pod(8.0, duration=5)
+    assert c.place(off, 0)
+    c.rollout(10)  # job finishes inside; rollout reconciles
+    assert off.uid not in c._pod_slots
+    assert float(np.asarray(c.state["off_cores"]).sum()) == 0.0
+    with pytest.raises(KeyError, match="unknown pod uid"):
+        c.remove(off.uid)
+
+
+# ---------------- actions & policy ----------------
+
+def test_policy_respects_budget_and_ranks_by_net_gain():
+    c = Cluster(num_nodes=4, seed=0)
+    for _ in range(3):
+        assert c.place(_offline_pod(12.0), 0)
+    assert c.place(_online_pod(500.0), 0)
+    c.rollout(10)
+    cfg = PolicyConfig(budget=10.0, max_actions_per_node=4)
+    policy = MitigationPolicy(_cheap_quantifier(), cfg)
+    hot = np.array([True, False, False, False])
+    plan = policy.plan(c, c.nodes_data(), hot)
+    assert plan  # an overloaded node yields candidates
+    assert sum(a.cost for a in plan) <= cfg.budget
+    net = [a.predicted_reduction - cfg.cost_weight * a.cost for a in plan]
+    assert all(g > 0 for g in net)
+    assert net == sorted(net, reverse=True)  # greedy order
+    assert all(a.node == 0 for a in plan)
+
+
+def test_action_cost_accounting():
+    cfg = PolicyConfig()
+    c = Cluster(num_nodes=2, seed=0)
+    off = _offline_pod(10.0, duration=100)
+    assert c.place(off, 0)
+    c.rollout(10)
+    policy = MitigationPolicy(_cheap_quantifier(), cfg)
+    plan = policy._candidates(c, c.nodes_data(), 0, np.array([True, False]))
+    evict = next(a for a in plan if isinstance(a, EvictOffline))
+    assert evict.cost == pytest.approx(cfg.evict_cost_per_core * 10.0)
+    resize = next(a for a in plan if isinstance(a, VerticalResize))
+    # cgroup write + stretch penalty: halving cores doubles remaining ticks
+    remaining = c.pods_on_node(0)[0]["remaining"]
+    stretch = remaining * (1.0 / cfg.throttle_frac - 1.0)
+    assert resize.cost == pytest.approx(cfg.resize_cost + 0.002 * stretch)
+    assert resize.new_cores == pytest.approx(10.0 * cfg.throttle_frac)
+
+
+def test_evict_applies_and_tolerates_missing_pod():
+    c = Cluster(num_nodes=1, seed=0)
+    off = _offline_pod(8.0)
+    assert c.place(off, 0)
+    act = EvictOffline(node=0, uid=off.uid, cost=1.0, predicted_reduction=5.0)
+    assert act.apply(c)
+    assert not act.apply(c)  # already gone: no-op, not an error
+
+
+# ---------------- retry queue ----------------
+
+class _FlakyScheduler:
+    """Rejects the first k offers, then always picks node 0."""
+
+    name = "flaky"
+
+    def __init__(self, k):
+        self.k = k
+        self.calls = 0
+
+    def select_node(self, pod, data):
+        self.calls += 1
+        return -1 if self.calls <= self.k else 0
+
+
+def test_retry_queue_reoffers_rejected_pods():
+    pods = [_online_pod(100.0) for _ in range(4)]
+    gaps = [3, 3, 3, 3]
+    r = run_experiment(_FlakyScheduler(2), pods, gaps, num_nodes=1, seed=0,
+                       settle_ticks=5)
+    assert r.queued_retries > 0            # early rejects landed via the queue
+    assert r.placed + r.rejected == len(pods)
+    assert r.placed == 4                   # nobody permanently dropped
+
+
+def test_retry_queue_bounded_and_attempts_exhausted():
+    pods = [_online_pod(100.0) for _ in range(5)]
+    gaps = [2] * 5
+    r = run_experiment(_FlakyScheduler(10_000), pods, gaps, num_nodes=1,
+                       seed=0, settle_ticks=5, retry_limit=2, retry_attempts=2)
+    assert r.placed == 0
+    assert r.rejected == 5
+    assert r.queued_retries == 0
+
+
+# ---------------- closed loop ----------------
+
+def test_control_loop_reduces_node_delay_under_overload():
+    def overloaded_cluster():
+        c = Cluster(num_nodes=4, seed=5)
+        assert c.place(_online_pod(400.0), 0)
+        for _ in range(3):
+            assert c.place(_offline_pod(12.0, duration=2000), 0)
+        c.rollout(10)
+        return c
+
+    delays = {}
+    for control in (False, True):
+        c = overloaded_cluster()
+        loop = ControlLoop(_cheap_quantifier()) if control else None
+        for _ in range(8):
+            c.rollout(10)
+            if loop is not None:
+                loop.step(c)
+        delays[control] = float(c.last["delay"].mean())
+    assert delays[True] < 0.5 * delays[False]
+    assert loop.stats.actions_applied > 0
+    assert loop.stats.hotspots_flagged > 0
+
+
+def test_policy_excludes_recently_acted_pods():
+    c = Cluster(num_nodes=2, seed=0)
+    off = _offline_pod(12.0)
+    assert c.place(off, 0)
+    c.rollout(10)
+    policy = MitigationPolicy(_cheap_quantifier(), PolicyConfig())
+    hot = np.array([True, False])
+    assert policy.plan(c, c.nodes_data(), hot)  # the job is actionable...
+    assert policy.plan(c, c.nodes_data(), hot,
+                       exclude_uids=frozenset({off.uid})) == []  # ...unless cooling down
+
+
+def test_loop_uid_cooldown_prevents_ping_pong():
+    c = Cluster(num_nodes=2, seed=0)
+    off = _offline_pod(12.0, duration=2000)
+    assert c.place(off, 0)
+    loop = ControlLoop(
+        _cheap_quantifier(),
+        ControlLoopConfig(cooldown=0, uid_cooldown=100),
+    )
+    acted_on = []
+    for _ in range(6):
+        c.rollout(10)
+        acted_on += [getattr(a, "uid", -1) for a in loop.step(c)]
+    # the job may be hit once (evict or throttle); never repeatedly
+    assert acted_on.count(off.uid) <= 1
+
+
+def test_control_loop_idle_on_calm_cluster():
+    c = Cluster(num_nodes=3, seed=2)
+    assert c.place(_online_pod(150.0), 0)
+    loop = ControlLoop(_cheap_quantifier())
+    for _ in range(6):
+        c.rollout(10)
+        loop.step(c)
+    assert loop.stats.actions_applied == 0
+
+
+def test_run_experiment_with_control_loop_integration():
+    pods, gaps = bursty_trace(num_online=6, num_bursts=2, jobs_per_burst=2, seed=1)
+    q = _cheap_quantifier()
+    loop = ControlLoop(_cheap_quantifier())
+    r = run_experiment(ICOScheduler(q), pods, gaps, num_nodes=6, seed=3,
+                       settle_ticks=10, control_loop=loop)
+    assert r.mitigations == loop.stats.actions_applied
+    assert r.placed + r.rejected == len(pods)
+    assert np.isfinite(r.p99_rt)
+
+
+def test_core_reexports_control_api():
+    import repro.core as core
+
+    assert core.ControlLoop is ControlLoop
+    assert core.ControlLoopConfig is ControlLoopConfig
+    with pytest.raises(AttributeError):
+        core.definitely_not_a_symbol

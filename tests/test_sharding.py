@@ -14,10 +14,17 @@ from repro.models import model as M
 from repro.models.sharding import ShardingRules
 
 
+def _abstract_mesh(shape, axes):
+    try:
+        return jax.sharding.AbstractMesh(shape, axes)  # jax >= 0.5
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))  # jax 0.4.x
+
+
 def _rules(arch, shape=(4, 4), axes=("data", "model")):
     cfg = get_config(arch)
     # AbstractMesh avoids touching devices
-    mesh = jax.sharding.AbstractMesh(shape, axes)
+    mesh = _abstract_mesh(shape, axes)
     return cfg, ShardingRules(cfg, mesh)
 
 
