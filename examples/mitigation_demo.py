@@ -1,10 +1,14 @@
-"""Runtime interference mitigation, end to end.
+"""Runtime interference mitigation, end to end — now verified.
 
 Places a small online fleet with ICO, lets the cluster settle, then slams
 one node with bursty offline jobs.  The control loop's streaming detector
-flags the hotspot from the live runqlat telemetry, the policy ranks
-mitigations by predicted runqlat reduction, and the chosen actions are
-applied — watch the flagged node's delay come back down.
+flags the hotspot from the live runqlat telemetry — and attributes it to
+the (node, slot) whose histogram drifted, i.e. the job that landed — the
+policy ranks mitigations by calibrated predicted runqlat reduction, the
+chosen actions are applied, and one window later each action's prediction
+is checked against the runqlat actually observed.  Watch the flagged
+node's delay come back down and the per-kind correction factors move away
+from 1.0 as the cost model learns how much its estimates over-promise.
 
 Run:  PYTHONPATH=src python examples/mitigation_demo.py
 """
@@ -58,19 +62,31 @@ def main() -> None:
     cluster.rollout(10)
     print("node delays:", np.round(cluster.last["delay"], 1))
 
-    print("\n== control loop: detect -> rank -> act ==")
+    print("\n== control loop: detect -> attribute -> rank -> act -> verify ==")
     for step in range(8):
         cluster.rollout(10)
         applied = loop.step(cluster)
         delays = np.round(cluster.last["delay"], 1)
         hot = loop.detector.last_diag["cusum"]
         print(f"step {step}: delays={delays} cusum0={hot[0]:.1f}")
+        if loop.detector.hot_slots():
+            print(f"   attribution (node -> drifted slot): {loop.detector.hot_slots()}")
         for a in applied:
             print(f"   -> {a.describe()}")
+        this_step = (loop.history and
+                     loop.history[-1]["step"] == loop.stats.steps)
+        for v in (loop.history[-1]["verified"] if this_step else []):
+            print(f"   verified {v['kind']}@node{v['node']}: "
+                  f"predicted {v['predicted']:.1f}, realized {v['realized']:.1f} "
+                  f"-> correction {v['correction']:.2f}")
 
     s = loop.stats
     print(f"\nflagged {s.hotspots_flagged} hotspot-windows, applied "
           f"{s.actions_applied} mitigations: {s.by_kind}")
+    print(f"verified {s.actions_verified} of them: predicted "
+          f"{s.predicted_reduction:.1f} vs realized {s.realized_reduction:.1f} "
+          f"latency-units reduction (rel. error {s.calibration_error():.2f})")
+    print("learned corrections:", {k: round(v, 2) for k, v in loop.corrections.items()})
     print("final node delays:", np.round(cluster.last["delay"], 1))
 
 

@@ -34,7 +34,9 @@ class ExperimentResult:
     placed: int
     rejected: int
     queued_retries: int = 0   # placements that succeeded via the retry queue
-    mitigations: int = 0      # control-loop actions applied (0 when off)
+    mitigations: int = 0      # control-loop actions applied DURING THIS RUN
+    predicted_reduction: float = 0.0  # cost-model claim for this run's actions
+    realized_reduction: float = 0.0   # what post-action verification observed
 
 
 def train_default_predictor(seed: int = 0, num_placements: int = 250):
@@ -119,14 +121,24 @@ def run_experiment(
 ) -> ExperimentResult:
     """Replay one arrival trace under a scheduler.
 
-    control_loop: optional ``repro.control.ControlLoop``; its ``step`` runs
-        after every rollout window, so mitigation interleaves with the same
-        tick cadence the scheduler sees.
+    control_loop: optional ``repro.control.ControlLoop`` — or a zero-arg
+        factory returning one, so drivers sweeping several schedulers can
+        thread a *fresh* loop per run instead of sharing one instance.  Its
+        ``step`` runs after every rollout window, so mitigation interleaves
+        with the same tick cadence the scheduler sees.  Mitigation counters
+        in the result are per-run deltas: a reused loop keeps cumulative
+        lifetime stats, and reporting those directly would overcount.
     retry_limit / retry_attempts: Algorithm 1 queues a pod when no node is
         feasible; rejected pods are re-offered at each subsequent arrival
         tick, up to ``retry_attempts`` times, from a queue bounded at
         ``retry_limit`` (overflow and exhausted pods count as rejected).
     """
+    if control_loop is not None and not hasattr(control_loop, "step"):
+        control_loop = control_loop()  # factory -> fresh per-run instance
+    stats0 = (0, 0.0, 0.0)
+    if control_loop is not None:
+        s = control_loop.stats
+        stats0 = (s.actions_applied, s.predicted_reduction, s.realized_reduction)
     cluster = Cluster(num_nodes=num_nodes, seed=seed)
     cluster.rollout(30)
     rt_all: list[np.ndarray] = []
@@ -183,6 +195,13 @@ def run_experiment(
         rt = np.full(1, np.nan)  # no online pod ever ran
     cpu = np.stack(cpu_series)  # (T, N)
     mem = np.stack(mem_series)
+    if control_loop is None:
+        mitigations, predicted, realized = 0, 0.0, 0.0
+    else:
+        s = control_loop.stats
+        mitigations = s.actions_applied - stats0[0]
+        predicted = s.predicted_reduction - stats0[1]
+        realized = s.realized_reduction - stats0[2]
     return ExperimentResult(
         scheduler=scheduler.name,
         avg_rt=float(rt.mean()),
@@ -193,7 +212,9 @@ def run_experiment(
         placed=placed,
         rejected=rejected,
         queued_retries=queued_retries,
-        mitigations=0 if control_loop is None else control_loop.stats.actions_applied,
+        mitigations=mitigations,
+        predicted_reduction=predicted,
+        realized_reduction=realized,
     )
 
 
@@ -202,10 +223,29 @@ def compare_schedulers(
     num_nodes: int = 12,
     seed: int = 7,
     predictor=None,
+    control: bool = False,
+    control_config=None,
+    trace: tuple | None = None,
 ) -> dict[str, ExperimentResult]:
+    """Figs. 13-15 comparison across ICO / RR / HUP / LQP.
+
+    control=True pairs EVERY scheduler with its own fresh
+    ``repro.control.ControlLoop`` (built per run from the shared predictor;
+    never a shared instance, so detector state, cooldowns, and learned
+    corrections cannot leak across schedulers).  ``trace`` optionally
+    replaces the default arrival trace with a pre-built (pods, gaps) pair,
+    e.g. ``bursty_trace(...)``.
+    """
     predictor = predictor or train_default_predictor(seed=seed)
-    pods, gaps = _arrival_trace(num_pods, seed)
+    pods, gaps = trace if trace is not None else _arrival_trace(num_pods, seed)
     out = {}
     for name, sched in make_schedulers(predictor).items():
-        out[name] = run_experiment(sched, pods, gaps, num_nodes=num_nodes, seed=seed)
+        loop = None
+        if control:
+            from repro.control import ControlLoop  # deferred: optional dep cycle
+
+            loop = lambda: ControlLoop(  # noqa: E731 - per-run factory
+                InterferenceQuantifier(predictor.predict), control_config)
+        out[name] = run_experiment(sched, pods, gaps, num_nodes=num_nodes,
+                                   seed=seed, control_loop=loop)
     return out

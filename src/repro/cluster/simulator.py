@@ -482,6 +482,9 @@ class Cluster:
         summaries = np.stack([runqlat_summary(h) for h in node_hist])
         features = np.concatenate([s["perf"], s["hw"], summaries], axis=1)
         on_active = np.asarray(self.state["on_active"])
+        # per-slot histograms in detector layout: online slots [0, S_ON),
+        # offline slots [S_ON, S_ON + S_OFF) — per-pod attribution keys on it
+        slot_hists = np.concatenate([s["hist_on"], s["hist_off"]], axis=1)
         return {
             "cpu_cur": s["cpu_demand"],
             "cpu_sum": np.asarray(self.state["cpu_sum"]),
@@ -489,6 +492,7 @@ class Cluster:
             "mem_sum": np.asarray(self.state["mem_sum"]),
             "online_hists": s["hist_on"],
             "offline_hists": s["hist_off"],
+            "slot_hists": slot_hists,
             "features": features,
             "online_qps_sum": (s["qps"] * on_active).sum(-1),
             "cpu_util": s["cpu_util"],

@@ -9,21 +9,24 @@ runtime mitigation systems (arXiv:2507.18005), which show that most
 tail-latency wins in co-located clusters come from runtime correction, not
 placement.
 
-The loop has three stages, each its own module:
+The loop has four stages; the first three are their own module:
 
-  detect  (``detector``) — a streaming detector folds every node's 200-bin
-      runqlat histogram into an exponentially-decayed estimate and runs a
-      CUSUM drift statistic on the decayed average, all N nodes in one
-      jit'd call.  A node is flagged on sustained drift (CUSUM over
-      threshold) or an acute tail spike (decayed p95 over ceiling).
+  detect  (``detector``) — a streaming detector folds every (node, slot)
+      200-bin runqlat histogram into exponentially-decayed estimates and
+      runs a CUSUM drift statistic on the decayed node average, all N
+      nodes and S slots in one jit'd call.  A node is flagged on sustained
+      drift (CUSUM over threshold) or an acute tail spike (decayed p95
+      over ceiling), and the flag carries per-slot attribution: the slot
+      whose own histogram drifted, i.e. *which pod* started the incident.
 
   rank    (``policy``) — per hotspot, candidate mitigations are scored by
-      predicted runqlat reduction: source-side relief from the simulator's
-      own M/G/1-PS delay curve, pod-side effects from the Eq. (3) Random
-      Forest via the Interference Quantification Module (destinations are
-      argmin predicted interference, mirroring initial placement).  A
-      greedy knapsack applies the best actions under a per-invocation
-      migration budget.
+      calibrated predicted runqlat reduction: source-side relief from the
+      simulator's own M/G/1-PS delay curve, pod-side effects from the
+      Eq. (3) Random Forest via the Interference Quantification Module
+      (destinations are argmin predicted interference, mirroring initial
+      placement).  Victims come from the detector's attribution when
+      available.  A greedy knapsack applies the best actions under a
+      per-invocation migration budget.
 
   act     (``actions``) — typed mitigations mapping onto the standard
       orchestrator toolbox: evict-offline (kill batch work),
@@ -31,10 +34,16 @@ The loop has three stages, each its own module:
       replica), vertical-resize (throttle a batch job's cores, work
       conserved).  Each carries a cost estimate the budget constrains.
 
+  verify  (``loop``) — one telemetry window after acting, each action's
+      ``predicted_reduction`` is compared against the runqlat delta the
+      node actually showed; an online per-kind multiplicative correction
+      (EWMA of the realized/predicted ratio) feeds back into the ranking,
+      demoting action kinds that over-promise.
+
 ``loop.ControlLoop`` ties the stages together and interleaves with
 ``Cluster.rollout`` every K ticks; ``run_experiment(...,
-control_loop=...)`` reruns the paper's Figs. 13-15 comparison with
-mitigation on/off.
+control_loop=...)`` and ``compare_schedulers(..., control=True)`` rerun
+the paper's Figs. 13-15 comparison with per-scheduler mitigation on/off.
 """
 from repro.control.actions import (
     Action,

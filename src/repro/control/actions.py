@@ -13,10 +13,17 @@ abstract budget units the policy spends per control invocation:
 ``apply`` returns True only when the simulator accepted the mutation; a
 pod that finished or was removed between planning and acting makes the
 action a no-op rather than an error.
+
+Applied actions double as verification records: the ControlLoop stamps
+``pre_runqlat`` (the source node's raw-window average runqlat at apply
+time) and, one step later, ``realized_reduction`` (the observed delta,
+attributed across same-node actions proportionally to their predictions).
+The realized/predicted ratio feeds the loop's per-kind online correction.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro.cluster.workloads import Pod, ONLINE_PROFILES
 
@@ -28,6 +35,8 @@ class Action:
     node: int
     cost: float = 0.0
     predicted_reduction: float = 0.0
+    pre_runqlat: float = math.nan       # source node avg runqlat at apply time
+    realized_reduction: float = math.nan  # observed delta, one step later
 
     kind = "noop"
 
@@ -35,8 +44,10 @@ class Action:
         raise NotImplementedError
 
     def describe(self) -> str:
+        realized = ("" if math.isnan(self.realized_reduction)
+                    else f", realized={self.realized_reduction:.1f}")
         return (f"{self.kind}(node={self.node}, cost={self.cost:.2f}, "
-                f"pred_reduction={self.predicted_reduction:.1f})")
+                f"pred_reduction={self.predicted_reduction:.1f}{realized})")
 
 
 @dataclasses.dataclass

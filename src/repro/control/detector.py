@@ -1,28 +1,44 @@
-"""Streaming hotspot detector over per-node runqlat telemetry.
+"""Streaming hotspot detector over per-node, per-slot runqlat telemetry.
 
 The Data Collection Module already emits, every rollout window, one
-Eq.(1)-style 200-bin runqlat histogram per node.  The detector folds those
-into an exponentially-decayed histogram per node (so quantile estimates
-track the recent past, not the whole run) and maintains a one-sided
-CUSUM drift statistic on the decayed average:
+Eq.(1)-style 200-bin runqlat histogram per (node, slot).  The detector
+folds those into exponentially-decayed histograms (so quantile estimates
+track the recent past, not the whole run) at two granularities:
+
+*Node track* — the slot histograms summed per node feed a one-sided CUSUM
+drift statistic on the decayed average:
 
     cusum_t = max(0, cusum_{t-1} + (avg_t - mu_t - slack))
 
 where ``mu`` is a slow EWMA baseline of the node's average runqlat.  A node
 is flagged as a hotspot when its CUSUM crosses the drift threshold (a
 sustained upward shift) or its decayed p95 crosses an absolute ceiling (an
-acute spike).  Flagging resets the node's CUSUM (hysteresis: one drift
-incident yields one flag); consumers that act on a slower cadence than
-they poll keep un-acted flags pending themselves (see ControlLoop).
+acute spike).  Flagging consumes the accumulated drift — on the *raw*
+(pre-warmup-mask) flag, so drift accumulated across the warmup transient
+cannot fire a spurious flag at exactly ``steps == warmup``.
 
-The whole update — decay, quantiles, baseline, CUSUM, flags — is a single
-jit'd call over all N nodes; there is no per-node Python loop, so the
-detector scales to thousands of nodes exactly like the scheduler hot path.
+*Slot track* — each slot keeps its own decayed histogram and a
+recency-weighted drift score accumulating the positive increments of its
+decayed average:
+
+    score_t = decay * score_{t-1} + max(0, s_avg_t - s_avg_{t-1})
+
+A pod that lands mid-incident jumps its slot's average from zero to the
+hot node's level in one window, so the slot that *started* the drift (the
+arriving offender) outranks long-resident slots that merely rose with it;
+the decay forgets old incidents so attribution always reflects the current
+one.  A hotspot flag therefore carries the (node, slot) whose runqlat
+drifted (``slot_scores`` / ``hot_slots``), and the mitigation policy picks
+victims from it directly instead of per-node heuristics.
+
+The whole update — decay, quantiles, baseline, CUSUM, slot scores, flags —
+is a single jit'd call over all N nodes and S slots; there is no per-node
+Python loop, so the detector scales to thousands of nodes exactly like the
+scheduler hot path.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +49,7 @@ from repro.core import metric
 
 @dataclasses.dataclass(frozen=True)
 class DetectorConfig:
-    decay: float = 0.5        # per-update decay of the accumulated histogram
+    decay: float = 0.5        # per-update decay of the accumulated histograms
     baseline_alpha: float = 0.05  # EWMA rate of the drift baseline mu
     slack: float = 8.0        # CUSUM allowance (latency units above baseline)
     drift_threshold: float = 60.0  # cumulative drift (latency units) to flag
@@ -43,14 +59,17 @@ class DetectorConfig:
 
 
 @jax.jit
-def _detector_update(hist, mu, cusum, steps, node_hists, decay, alpha, slack,
-                     drift_thr, q, abs_thr, warmup):
-    """One detector step for all nodes at once.
+def _detector_update(hist, mu, cusum, slot_hist, slot_prev, slot_score, steps,
+                     slot_hists, decay, alpha, slack, drift_thr, q, abs_thr,
+                     warmup):
+    """One detector step for all nodes and slots at once.
 
-    hist (N, 200), mu (N,), cusum (N,), steps () int32; node_hists (N, 200)
-    fresh counts from the last telemetry window.  Returns the new state plus
-    the hotspot mask and a diagnostics dict.
+    hist (N, 200), mu (N,), cusum (N,), slot_hist (N, S, 200),
+    slot_prev/slot_score (N, S), steps () int32; slot_hists (N, S, 200)
+    fresh per-slot counts from the last telemetry window.  Returns the new
+    state plus the hotspot mask and a diagnostics dict.
     """
+    node_hists = slot_hists.sum(1)
     hist = hist * decay + node_hists
     avg = metric.avg_runqlat(hist)
     p_tail = metric.percentile(hist, q)
@@ -60,16 +79,31 @@ def _detector_update(hist, mu, cusum, steps, node_hists, decay, alpha, slack,
     mu = jnp.where(steps == 0, avg, (1.0 - alpha) * mu + alpha * avg)
     cusum = jnp.maximum(cusum + (avg - mu - slack), 0.0)
 
-    hot = (cusum > drift_thr) | (p_tail > abs_thr)
-    hot = hot & (steps >= warmup)
+    raw_hot = (cusum > drift_thr) | (p_tail > abs_thr)
+    hot = raw_hot & (steps >= warmup)
     # hysteresis: a flag consumes the accumulated drift, so a node must
     # re-accumulate before flagging again (the acute p_tail path still
-    # refires); the ControlLoop keeps un-acted flags pending across an
-    # interval skip so incidents aren't lost to acting cadence
-    cusum = jnp.where(hot, 0.0, cusum)
+    # refires).  The reset keys on the RAW flag: suppressing only the mask
+    # during warmup would leave the warmup transient's drift in cusum and
+    # fire a spurious flag at exactly steps == warmup.  The ControlLoop
+    # keeps un-acted flags pending across an interval skip so incidents
+    # aren't lost to acting cadence.
+    cusum = jnp.where(raw_hot, 0.0, cusum)
 
-    diag = {"avg": avg, "p_tail": p_tail, "mu": mu, "cusum": cusum}
-    return hist, mu, cusum, steps + 1, hot, diag
+    # slot track: decayed per-slot histogram + recency-weighted positive
+    # drift of its average.  A vacated slot's decayed average is invariant
+    # under decay (numerator and denominator shrink together) so it stops
+    # scoring; a pod landing in a slot jumps the average and scores the
+    # full jump, which is exactly the arriving-offender signal we want.
+    slot_hist = slot_hist * decay + slot_hists
+    s_avg = metric.avg_runqlat(slot_hist)
+    slot_score = decay * slot_score + jnp.maximum(s_avg - slot_prev, 0.0)
+    slot_prev = s_avg
+
+    diag = {"avg": avg, "p_tail": p_tail, "mu": mu, "cusum": cusum,
+            "slot_avg": s_avg, "slot_score": slot_score}
+    return (hist, mu, cusum, slot_hist, slot_prev, slot_score, steps + 1,
+            hot, diag)
 
 
 class StreamingDetector:
@@ -85,17 +119,52 @@ class StreamingDetector:
         self.mu = jnp.zeros((self.n,), jnp.float32)
         self.cusum = jnp.zeros((self.n,), jnp.float32)
         self.steps = jnp.int32(0)
+        # slot-track state is shaped by the first update (S is a property
+        # of the telemetry, not of the cluster size)
+        self.num_slots: int | None = None
+        self.slot_hist = None
+        self.slot_prev = None
+        self.slot_score = None
+        self.slot_scores: np.ndarray | None = None  # (N, S) after update()
+        self.last_hot: np.ndarray | None = None
         self.last_diag: dict | None = None
 
-    def update(self, node_hists) -> np.ndarray:
-        """Feed one window of per-node histograms; returns hotspot mask (N,)."""
+    def _ensure_slots(self, num_slots: int) -> None:
+        if self.num_slots == num_slots:
+            return
+        self.num_slots = num_slots
+        self.slot_hist = jnp.zeros((self.n, num_slots, metric.NUM_BINS),
+                                   jnp.float32)
+        self.slot_prev = jnp.zeros((self.n, num_slots), jnp.float32)
+        self.slot_score = jnp.zeros((self.n, num_slots), jnp.float32)
+
+    def update(self, hists) -> np.ndarray:
+        """Feed one window of runqlat histograms; returns hotspot mask (N,).
+
+        hists: (N, S, 200) per-slot counts (full attribution) or (N, 200)
+        node-level counts (treated as a single slot; node behaviour is
+        identical either way because the node track sums over slots).
+        """
         c = self.cfg
-        self.hist, self.mu, self.cusum, self.steps, hot, diag = _detector_update(
-            self.hist, self.mu, self.cusum, self.steps,
-            jnp.asarray(node_hists, jnp.float32),
+        hists = jnp.asarray(hists, jnp.float32)
+        if hists.ndim == 2:
+            hists = hists[:, None, :]
+        self._ensure_slots(hists.shape[1])
+        (self.hist, self.mu, self.cusum, self.slot_hist, self.slot_prev,
+         self.slot_score, self.steps, hot, diag) = _detector_update(
+            self.hist, self.mu, self.cusum, self.slot_hist, self.slot_prev,
+            self.slot_score, self.steps, hists,
             c.decay, c.baseline_alpha, c.slack, c.drift_threshold,
             c.quantile, c.abs_threshold, c.warmup,
         )
         self.last_diag = {k: np.asarray(v) for k, v in diag.items()}
-        return np.asarray(hot)
+        self.slot_scores = self.last_diag["slot_score"]
+        self.last_hot = np.asarray(hot)
+        return self.last_hot
 
+    def hot_slots(self) -> dict[int, int]:
+        """Attribution of the last update: flagged node -> drifted slot."""
+        if self.last_hot is None or self.slot_scores is None:
+            return {}
+        return {int(n): int(np.argmax(self.slot_scores[n]))
+                for n in np.nonzero(self.last_hot)[0]}

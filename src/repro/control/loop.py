@@ -1,10 +1,19 @@
-"""Closed-loop controller: detect hotspots, plan mitigations, act.
+"""Closed-loop controller: detect hotspots, plan mitigations, act, verify.
 
 ``ControlLoop.step(cluster)`` consumes the Data Collection Module output
-for the last telemetry window, feeds the per-node runqlat histograms to the
-streaming detector (one jit'd call over all nodes), and — every
+for the last telemetry window, feeds the per-slot runqlat histograms to the
+streaming detector (one jit'd call over all nodes and slots), and — every
 ``interval``-th invocation with at least one flagged node — asks the
 mitigation policy for a budgeted action plan and applies it.
+
+The loop is *verified*, not open-loop: every applied action records the
+source node's raw-window average runqlat, and on the next ``step`` the
+observed delta is compared against the action's ``predicted_reduction``.
+An online per-action-kind multiplicative correction (EWMA of the
+realized/predicted ratio, clipped) rescales future predictions in the
+policy's greedy ranking, so action kinds that over-promise are demoted and
+the cost model self-calibrates during the run.  Realized-vs-predicted
+totals are surfaced in ``ControlStats`` and per-step ``history`` entries.
 
 ``run(cluster, num_ticks, k)`` interleaves the loop with
 ``Cluster.rollout`` every ``k`` ticks for standalone use; experiment
@@ -14,12 +23,14 @@ drivers that own the rollout cadence (``run_experiment``) just call
 from __future__ import annotations
 
 import dataclasses
+import weakref
 
 import numpy as np
 
 from repro.control.actions import Action
 from repro.control.detector import DetectorConfig, StreamingDetector
 from repro.control.policy import MitigationPolicy, PolicyConfig
+from repro.core import metric
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,6 +38,12 @@ class ControlLoopConfig:
     interval: int = 1      # act on every interval-th step() call
     cooldown: int = 2      # steps a node is left alone after being acted on
     uid_cooldown: int = 4  # steps a pod is left alone after being acted on
+    corr_beta: float = 0.35  # EWMA rate of the per-kind calibration factor
+    corr_min: float = 0.4    # calibration clamp: demote an over-promising kind
+                             # at most 2.5x — post-action windows are noisy
+                             # (seasonal QPS drift, rollout jitter), and an
+                             # unlucky sample must not bury a kind for good
+    corr_max: float = 2.0    # ... nor credit it more than 2x its prediction
     detector: DetectorConfig = dataclasses.field(default_factory=DetectorConfig)
     policy: PolicyConfig = dataclasses.field(default_factory=PolicyConfig)
 
@@ -37,7 +54,16 @@ class ControlStats:
     hotspots_flagged: int = 0
     actions_planned: int = 0
     actions_applied: int = 0
+    actions_verified: int = 0
+    verifications_discarded: int = 0  # post-action windows too churned to read
+    predicted_reduction: float = 0.0  # sum of predictions of verified actions
+    realized_reduction: float = 0.0   # sum of observed post-action deltas
+    calibration_abs_error: float = 0.0  # sum |realized - predicted|
     by_kind: dict = dataclasses.field(default_factory=dict)
+
+    def calibration_error(self) -> float:
+        """Mean relative |realized - predicted| error of the cost model."""
+        return self.calibration_abs_error / max(self.predicted_reduction, 1e-9)
 
 
 class ControlLoop:
@@ -46,24 +72,98 @@ class ControlLoop:
     def __init__(self, quantifier, config: ControlLoopConfig | None = None):
         self.cfg = config or ControlLoopConfig()
         self.policy = MitigationPolicy(quantifier, self.cfg.policy)
-        self.detector: StreamingDetector | None = None
         self.stats = ControlStats()
         self.history: list[dict] = []
+        # per-kind multiplicative calibration of predicted_reduction,
+        # learned online from post-action verification (1.0 = trust model)
+        self.corrections: dict[str, float] = {}
+        self.reset()
+
+    def reset(self) -> None:
+        """Forget per-cluster state: detector, cooldowns, pending checks.
+
+        Called automatically when ``step`` sees a new cluster object (even
+        one of the same size — node/pod ids and telemetry baselines from
+        another cluster are stale).  Learned ``corrections`` and cumulative
+        ``stats``/``history`` survive: calibration is a property of the
+        cost model, not of one cluster, and drivers that reuse a loop
+        report per-run deltas (see ``run_experiment``).
+        """
+        self.detector: StreamingDetector | None = None
+        self._cluster_ref = lambda: None
         self._last_acted: dict[int, int] = {}      # node -> step of last action
         self._uid_last_acted: dict[int, int] = {}  # pod uid -> step (anti-ping-pong)
         self._pending: dict[int, int] = {}         # hot node -> step flagged
+        self._to_verify: list[Action] = []         # applied last step, unchecked
+        self._verify_uids: dict[int, frozenset] = {}  # node -> pods right after acting
+
+    def _verify(self, cluster, window_avg: np.ndarray) -> list[dict]:
+        """Compare last step's actions against the runqlat actually observed.
+
+        The node's realized delta is attributed across same-node actions
+        proportionally to their predictions (they share one telemetry
+        window), and each action's kind correction moves toward its clipped
+        realized/predicted ratio.  A node whose pod set changed between
+        acting and checking (a new arrival landed, a batch job finished) is
+        discarded: its delta measures the churn, not the action, and one
+        contaminated sample can drag a kind's correction to the floor.
+        """
+        verified: list[dict] = []
+        if not self._to_verify:
+            return verified
+        cfg = self.cfg
+        by_node: dict[int, list[Action]] = {}
+        for a in self._to_verify:
+            by_node.setdefault(a.node, []).append(a)
+        for node, acts in by_node.items():
+            now = frozenset(p["uid"] for p in cluster.pods_on_node(node))
+            if now != self._verify_uids.get(node):
+                self.stats.verifications_discarded += len(acts)
+                continue
+            delta = float(acts[0].pre_runqlat - window_avg[node])
+            total_pred = sum(a.predicted_reduction for a in acts)
+            for a in acts:
+                share = a.predicted_reduction / max(total_pred, 1e-9)
+                a.realized_reduction = delta * share
+                ratio = float(np.clip(
+                    a.realized_reduction / max(a.predicted_reduction, 1e-9),
+                    0.0, cfg.corr_max))
+                old = self.corrections.get(a.kind, 1.0)
+                self.corrections[a.kind] = float(np.clip(
+                    (1.0 - cfg.corr_beta) * old + cfg.corr_beta * ratio,
+                    cfg.corr_min, cfg.corr_max))
+                self.stats.actions_verified += 1
+                self.stats.predicted_reduction += a.predicted_reduction
+                self.stats.realized_reduction += a.realized_reduction
+                self.stats.calibration_abs_error += abs(
+                    a.realized_reduction - a.predicted_reduction)
+                verified.append({
+                    "node": node, "kind": a.kind,
+                    "predicted": a.predicted_reduction,
+                    "realized": a.realized_reduction,
+                    "correction": self.corrections[a.kind],
+                })
+        self._to_verify = []
+        self._verify_uids = {}
+        return verified
 
     def step(self, cluster) -> list[Action]:
         """One control iteration; returns the actions actually applied."""
-        if self.detector is None or self.detector.n != cluster.n:
+        if (self.detector is None or self.detector.n != cluster.n
+                or self._cluster_ref() is not cluster):
+            self.reset()
             self.detector = StreamingDetector(cluster.n, self.cfg.detector)
-            # node/pod ids from another cluster are stale
-            self._last_acted.clear()
-            self._uid_last_acted.clear()
-            self._pending.clear()
+            self._cluster_ref = weakref.ref(cluster)
         data = cluster.nodes_data()
-        node_hists = data["online_hists"].sum(1) + data["offline_hists"].sum(1)
-        hot = self.detector.update(node_hists)
+        slot_hists = data.get("slot_hists")
+        if slot_hists is None:
+            slot_hists = np.concatenate(
+                [data["online_hists"], data["offline_hists"]], axis=1)
+        # raw last-window node average (NOT the detector's decayed estimate):
+        # verification compares like with like across two adjacent windows
+        window_avg = np.asarray(metric.avg_runqlat(slot_hists.sum(1)))
+        verified = self._verify(cluster, window_avg)
+        hot = self.detector.update(slot_hists)
         self.stats.steps += 1
         self.stats.hotspots_flagged += int(hot.sum())
 
@@ -93,11 +193,15 @@ class ControlLoop:
                 if self.stats.steps - step < self.cfg.uid_cooldown
             )
             plan = self.policy.plan(cluster, data, actionable,
-                                    exclude_uids=recently_acted)
+                                    exclude_uids=recently_acted,
+                                    corrections=self.corrections,
+                                    attribution=self.detector.slot_scores)
             self.stats.actions_planned += len(plan)
             for action in plan:
                 if action.apply(cluster):
                     applied.append(action)
+                    action.pre_runqlat = float(window_avg[action.node])
+                    self._to_verify.append(action)
                     self.stats.actions_applied += 1
                     self.stats.by_kind[action.kind] = (
                         self.stats.by_kind.get(action.kind, 0) + 1
@@ -107,11 +211,16 @@ class ControlLoop:
                     uid = getattr(action, "uid", -1)
                     if uid >= 0:
                         self._uid_last_acted[uid] = self.stats.steps
-        if hot.any() or applied:
+            for node in {a.node for a in applied}:
+                self._verify_uids[node] = frozenset(
+                    p["uid"] for p in cluster.pods_on_node(node))
+        if hot.any() or applied or verified:
             self.history.append({
                 "step": self.stats.steps,
                 "hot_nodes": np.nonzero(hot)[0].tolist(),
+                "hot_slots": self.detector.hot_slots(),
                 "applied": [a.describe() for a in applied],
+                "verified": verified,
             })
         return applied
 

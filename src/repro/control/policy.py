@@ -2,9 +2,8 @@
 runqlat reduction under a migration-budget constraint.
 
 For every flagged node the policy enumerates one candidate of each action
-type (evict the heaviest offline job, throttle it instead, migrate the
-hottest online service, scale it out) and estimates the runqlat reduction
-each would buy:
+type (evict / throttle an offline offender, migrate / scale out an online
+victim) and estimates the runqlat reduction each would buy:
 
   * source-side relief comes from the same M/G/1-PS delay curve the
     simulator uses — removing c cores of (burst-weighted) pressure from a
@@ -14,9 +13,18 @@ each would buy:
     would see on each candidate destination, so migration destinations are
     chosen by argmin predicted interference, exactly like initial placement.
 
+Victim selection is attribution-first: when the detector supplies per-slot
+drift scores (which pod's histogram drifted), offenders and victims are
+ranked by their slot's score, with the old node-level heuristics
+(cores x burst pressure for offline, QPS for online) demoted to
+tie-breakers; without attribution the heuristics apply unchanged.
+
 Candidates across all hotspots are pooled, scored by
-``predicted_reduction - cost_weight * cost``, and applied greedily until
-the per-invocation budget is exhausted.
+``correction[kind] * predicted_reduction - cost_weight * cost``, and
+applied greedily until the per-invocation budget is exhausted.  The
+per-kind corrections come from the ControlLoop's post-action verification
+pass: action kinds whose realized reduction historically under-delivers
+their prediction are demoted in the greedy ranking.
 """
 from __future__ import annotations
 
@@ -45,6 +53,10 @@ class PolicyConfig:
     scale_out_cost: float = 5.0
     resize_cost: float = 0.5
     throttle_frac: float = 0.5    # vertical resize shrinks cores to this
+    min_offline_cores: float = 2.0  # never throttle a job below this; repeated
+                                    # re-throttling otherwise compounds
+                                    # throttle_frac toward zero cores and
+                                    # stretches off_remaining without bound
     cpu_threshold: float = 0.70   # destination feasibility thresholds match the
     mem_threshold: float = 0.80   # scheduler's Eq. (5)/(6) cutoffs
     # Unlike admission, destination demand is NOT headroom-inflated by
@@ -95,21 +107,30 @@ class MitigationPolicy:
 
     # -------- planning --------
 
-    def plan(self, cluster, data, hot, exclude_uids=frozenset()) -> list[Action]:
-        """exclude_uids: pods recently acted on (per-pod anti-ping-pong)."""
+    def plan(self, cluster, data, hot, exclude_uids=frozenset(),
+             corrections=None, attribution=None) -> list[Action]:
+        """exclude_uids: pods recently acted on (per-pod anti-ping-pong).
+        corrections: per-kind multiplicative calibration of
+            ``predicted_reduction`` learned by post-action verification
+            (missing kinds default to 1.0, i.e. trust the cost model).
+        attribution: (N, S) per-slot drift scores from the detector; when
+            given, victims are the pods whose histograms drifted.
+        """
         hot = np.asarray(hot, bool)
+        corrections = corrections or {}
         candidates: list[Action] = []
         for node in np.nonzero(hot)[0]:
             candidates.extend(
-                self._candidates(cluster, data, int(node), hot, exclude_uids)
+                self._candidates(cluster, data, int(node), hot, exclude_uids,
+                                 attribution)
             )
 
-        candidates = [a for a in candidates
-                      if a.predicted_reduction - self.cfg.cost_weight * a.cost > 0]
-        candidates.sort(
-            key=lambda a: a.predicted_reduction - self.cfg.cost_weight * a.cost,
-            reverse=True,
-        )
+        def net_gain(a: Action) -> float:
+            calibrated = corrections.get(a.kind, 1.0) * a.predicted_reduction
+            return calibrated - self.cfg.cost_weight * a.cost
+
+        candidates = [a for a in candidates if net_gain(a) > 0]
+        candidates.sort(key=net_gain, reverse=True)
         chosen, spent, per_node = [], 0.0, {}
         used_uids: set[int] = set()
         for a in candidates:
@@ -129,7 +150,7 @@ class MitigationPolicy:
         return chosen
 
     def _candidates(self, cluster, data, node: int, hot: np.ndarray,
-                    exclude_uids=frozenset()) -> list[Action]:
+                    exclude_uids=frozenset(), attribution=None) -> list[Action]:
         cfg = self.cfg
         pods = cluster.pods_on_node(node)
         eligible = [p for p in pods if p["uid"] not in exclude_uids]
@@ -139,10 +160,24 @@ class MitigationPolicy:
         rho_p = self._pressure(cluster, data, node, pods)  # all pods press
         out: list[Action] = []
 
-        # offline offenders, heaviest pressure source (cores x burst) first;
+        def drift(p: dict) -> float:
+            """Per-slot drift score of a pod (0 without attribution).
+
+            Online pods occupy detector slots [0, S_ON); offline pods are
+            offset by S_ON, matching the hist_on ++ hist_off concatenation
+            the ControlLoop feeds the detector.
+            """
+            if attribution is None:
+                return 0.0
+            s = p["slot"] + (0 if p["kind"] == "on" else sim.S_ON)
+            return float(attribution[node, s])
+
+        # offline offenders: the slot whose histogram drifted first, then
+        # heaviest pressure source (cores x burst) as tie-break / fallback;
         # each contributes an evict and a throttle candidate so the greedy
         # pass can combine several cheap throttles or one decisive eviction
-        offline.sort(key=lambda p: p["cores"] * p["burst"], reverse=True)
+        offline.sort(key=lambda p: (drift(p), p["cores"] * p["burst"]),
+                     reverse=True)
         for job in offline[:cfg.max_actions_per_node + 1]:
             dcores = job["cores"] * job["burst"]
             out.append(EvictOffline(
@@ -150,17 +185,25 @@ class MitigationPolicy:
                 cost=cfg.evict_cost_per_core * job["cores"],
                 predicted_reduction=self._relief(rho_p, dcores, cores),
             ))
+            new_cores = job["cores"] * cfg.throttle_frac
+            if new_cores < cfg.min_offline_cores:
+                continue  # already throttled to the floor: re-halving would
+                          # shrink cores toward zero and stretch the job
+                          # unboundedly for ever-smaller relief
             stretch = job["remaining"] * (1.0 / cfg.throttle_frac - 1.0)
             out.append(VerticalResize(
                 node=node, uid=job["uid"],
-                new_cores=job["cores"] * cfg.throttle_frac,
+                new_cores=new_cores,
                 cost=cfg.resize_cost + 0.002 * stretch,
                 predicted_reduction=self._relief(
                     rho_p, dcores * (1.0 - cfg.throttle_frac), cores),
             ))
 
         if online:
-            victim = max(online, key=lambda p: p["qps"])
+            # the victim is the online pod whose own histogram drifted most
+            # (the one actually suffering); QPS breaks ties / is the
+            # fallback when no attribution is available
+            victim = max(online, key=lambda p: (drift(p), p["qps"]))
             prof = ONLINE_PROFILES[victim["workload"]]
             cpu_pod = prof.cpu_per_qps * victim["qps"] + prof.cpu_base
             mem_pod = prof.mem_per_qps * victim["qps"] + prof.mem_base
@@ -174,7 +217,11 @@ class MitigationPolicy:
                 dst = int(dsts[np.argmin(pred[dsts])])
                 # the pod rides along: only move it when the model predicts
                 # a real gap, else migration is churn that stacks load on
-                # whichever node happens to be in a seasonal trough
+                # whichever node happens to be in a seasonal trough.  No
+                # explicit destination charge here (unlike scale-out below):
+                # the RF maps PRE-placement node features to the runqlat the
+                # pod REALIZED after landing, so pred[dst] already prices in
+                # the pod's own added load on the destination
                 if pred[node] - pred[dst] > cfg.migrate_margin:
                     out.append(MigrateOnline(
                         node=node, uid=victim["uid"], dst=dst,
@@ -184,12 +231,24 @@ class MitigationPolicy:
                     ))
                 half = victim["qps"] / 2.0
                 if half >= cfg.min_scale_qps:
+                    # splitting QPS in half does NOT halve the pod's CPU:
+                    # the source keeps its full cpu_base (relief is only
+                    # the per-QPS share) and the replica brings a brand-new
+                    # cpu_base to the destination — charge that added load
+                    # against the destination's delay curve, else the
+                    # estimate is systematically optimistic
                     cpu_half = prof.cpu_per_qps * half
+                    dst_cores = float(data["cpu_sum"][dst])
+                    rho_dst = float(data["cpu_cur"][dst] / dst_cores)
+                    dst_add = cpu_half + prof.cpu_base
+                    dst_penalty = self._relief(
+                        rho_dst + dst_add / dst_cores, dst_add, dst_cores)
                     out.append(ScaleOut(
                         node=node, uid=victim["uid"], workload=victim["workload"],
                         dst=dst, replica_qps=half,
                         cost=cfg.scale_out_cost,
                         predicted_reduction=self._relief(rho_p, cpu_half, cores)
-                        + 0.3 * max(pred[node] - pred[dst], 0.0),
+                        + 0.3 * max(pred[node] - pred[dst], 0.0)
+                        - dst_penalty,
                     ))
         return out

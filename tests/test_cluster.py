@@ -47,6 +47,40 @@ def test_nodes_data_shapes():
     assert d["cpu_cur"].shape == (3,)
 
 
+def test_nodes_data_slot_hists_layout():
+    """Per-pod attribution keys on this layout: online slots first, then
+    offline slots, matching hist_on ++ hist_off concatenation."""
+    from repro.cluster.simulator import S_OFF, S_ON
+
+    c = Cluster(num_nodes=3, seed=0)
+    c.rollout(20)
+    d = c.nodes_data()
+    assert d["slot_hists"].shape == (3, S_ON + S_OFF, 200)
+    np.testing.assert_array_equal(d["slot_hists"][:, :S_ON], d["online_hists"])
+    np.testing.assert_array_equal(d["slot_hists"][:, S_ON:], d["offline_hists"])
+
+
+def test_migrate_to_full_destination_restores_state_exactly():
+    """A refused migration must leave every state array bit-identical."""
+    from repro.cluster.simulator import S_ON
+
+    c = Cluster(num_nodes=2, seed=3)
+    for _ in range(S_ON):  # destination online slots all taken
+        p = Pod("web_serving", 150.0, True)
+        p.cpu_demand, p.mem_demand = 2.3, 2.1
+        assert c.place(p, 1)
+    victim = Pod("web_search", 200.0, True)
+    victim.cpu_demand, victim.mem_demand = 5.2, 4.2
+    assert c.place(victim, 0)
+    before = {k: np.asarray(v).copy() for k, v in c.state.items()}
+    slots_before = dict(c._pod_slots)
+
+    assert not c.migrate(victim.uid, 1)
+    for k, v in c.state.items():
+        np.testing.assert_array_equal(np.asarray(v), before[k], err_msg=k)
+    assert c._pod_slots == slots_before
+
+
 def test_trace_statistics():
     tr = qps_trace(300.0, 4000, seed=0)
     assert tr.shape == (4000,)

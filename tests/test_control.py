@@ -1,13 +1,14 @@
-"""Runtime mitigation control plane: detector, actions, policy, simulator
-primitives (migrate/resize/reconcile), retry queue, and the closed loop."""
+"""Runtime mitigation control plane: detector (node + per-slot attribution),
+actions, policy, simulator primitives (migrate/resize/reconcile), retry
+queue, the closed loop, and post-action verification/calibration."""
 import dataclasses
 
 import numpy as np
 import pytest
 
-from repro.cluster.experiment import bursty_trace, run_experiment
-from repro.cluster.simulator import Cluster
-from repro.cluster.workloads import OFFLINE_PROFILES, Pod
+from repro.cluster.experiment import bursty_trace, compare_schedulers, run_experiment
+from repro.cluster.simulator import S_OFF, S_ON, Cluster
+from repro.cluster.workloads import OFFLINE_PROFILES, ONLINE_PROFILES, Pod
 from repro.control import (
     ControlLoop,
     ControlLoopConfig,
@@ -15,6 +16,7 @@ from repro.control import (
     EvictOffline,
     MitigationPolicy,
     PolicyConfig,
+    ScaleOut,
     StreamingDetector,
     VerticalResize,
 )
@@ -72,6 +74,58 @@ def test_detector_single_jitted_call_tracks_quantiles():
     # decayed quantile estimates order with the underlying load
     assert diag["p_tail"][1] > diag["p_tail"][0] > diag["p_tail"][2]
     assert diag["avg"].shape == (3,)
+
+
+def test_detector_warmup_consumes_cusum():
+    """Regression: drift accumulated during the warmup transient used to be
+    suppressed but not consumed, firing a spurious flag at steps == warmup."""
+    rng = np.random.default_rng(3)
+    cfg = DetectorConfig(warmup=3, abs_threshold=1e9)  # isolate the drift path
+    det = StreamingDetector(1, cfg)
+    det.update(_hists(1, [20.0], rng))   # seeds the baseline
+    det.update(_hists(1, [120.0], rng))  # warmup transient drifts hard...
+    det.update(_hists(1, [120.0], rng))  # ...past drift_threshold
+    # back at baseline exactly when warmup expires: the transient's leftover
+    # CUSUM must not fire now (raw flags consumed it during warmup)
+    for _ in range(3):
+        assert not det.update(_hists(1, [20.0], rng)).any()
+
+
+def _slot_hists(levels, rng):
+    """(N, S) mean levels -> (N, S, 200) per-slot histograms."""
+    return np.stack([_hists(len(row), row, rng) for row in levels])
+
+
+def test_detector_per_slot_attribution():
+    """A hotspot flag carries the (node, slot) whose runqlat drifted."""
+    rng = np.random.default_rng(7)
+    det = StreamingDetector(2)
+    calm = [[30.0, 30.0, 0.0], [25.0, 25.0, 0.0]]
+    for _ in range(5):
+        assert not det.update(_slot_hists(calm, rng)).any()
+    # a heavy job "lands" in slot 2 of node 0 and drags the node up
+    hot_lv = [[80.0, 80.0, 600.0], [25.0, 25.0, 0.0]]
+    flagged = np.zeros(2, bool)
+    for _ in range(4):
+        hot = det.update(_slot_hists(hot_lv, rng))
+        if hot.any():
+            assert det.hot_slots() == {0: 2}  # attribution names the arrival
+        flagged |= hot
+    assert flagged[0] and not flagged[1]
+    assert det.slot_scores.shape == (2, 3)
+    assert det.slot_scores[0, 2] > det.slot_scores[0, :2].max()
+
+
+def test_detector_determinism_across_reset():
+    rng = np.random.default_rng(11)
+    seq = [_slot_hists([[20.0, 0.0], [30.0, 400.0]], rng) for _ in range(6)]
+    det = StreamingDetector(2)
+    first = [(det.update(h).copy(), det.slot_scores.copy()) for h in seq]
+    det.reset()
+    second = [(det.update(h).copy(), det.slot_scores.copy()) for h in seq]
+    for (h1, s1), (h2, s2) in zip(first, second):
+        np.testing.assert_array_equal(h1, h2)
+        np.testing.assert_allclose(s1, s2)
 
 
 # ---------------- simulator primitives ----------------
@@ -187,6 +241,122 @@ def test_evict_applies_and_tolerates_missing_pod():
     assert not act.apply(c)  # already gone: no-op, not an error
 
 
+def test_scale_out_rolls_back_replica_when_original_vanished():
+    c = Cluster(num_nodes=2, seed=0)
+    on = _online_pod(400.0)
+    assert c.place(on, 0)
+    act = ScaleOut(node=0, uid=on.uid, workload="web_search", dst=1,
+                   replica_qps=200.0)
+    c.remove(on.uid)  # original disappears between planning and acting
+    before = c.active_pod_count()
+    assert not act.apply(c)
+    assert c.active_pod_count() == before  # the replica was rolled back
+    assert not np.asarray(c.state["on_active"])[1].any()
+
+
+def test_planned_actions_tolerate_job_finishing_before_apply():
+    """reconcile() runs inside resize/remove: a plan computed against a job
+    that finishes before acting degrades to a no-op, not an error."""
+    c = Cluster(num_nodes=2, seed=0)
+    off = _offline_pod(12.0, duration=5)
+    assert c.place(off, 0)
+    resize = VerticalResize(node=0, uid=off.uid, new_cores=6.0)
+    evict = EvictOffline(node=0, uid=off.uid)
+    c.rollout(10)  # the job finishes mid-plan; rollout reconciles it away
+    assert not resize.apply(c)
+    assert not evict.apply(c)
+
+
+def test_scale_out_relief_charges_replica_base_on_destination():
+    """Splitting QPS keeps cpu_base on the source AND adds a new cpu_base on
+    the destination; the relief estimate must charge that added load."""
+    c = Cluster(num_nodes=3, seed=0)
+    assert c.place(_online_pod(900.0), 0)
+    for _ in range(3):
+        assert c.place(_offline_pod(12.0), 0)
+    c.rollout(10)
+    policy = MitigationPolicy(_cheap_quantifier())
+    data = c.nodes_data()
+    cands = policy._candidates(c, data, 0, np.array([True, False, False]))
+    so = [a for a in cands if isinstance(a, ScaleOut)]
+    assert so
+    a = so[0]
+    prof = ONLINE_PROFILES["web_search"]
+    rho_p = policy._pressure(c, data, 0, c.pods_on_node(0))
+    cores = float(data["cpu_sum"][0])
+    pred = np.asarray(policy.q.intf_pod(900.0, data["features"])) * metric.OVERFLOW_EDGE
+    cpu_half = prof.cpu_per_qps * 450.0
+    legacy = (policy._relief(rho_p, cpu_half, cores)
+              + 0.3 * max(float(pred[0] - pred[a.dst]), 0.0))
+    dst_cores = float(data["cpu_sum"][a.dst])
+    dst_add = cpu_half + prof.cpu_base
+    penalty = policy._relief(
+        float(data["cpu_cur"][a.dst]) / dst_cores + dst_add / dst_cores,
+        dst_add, dst_cores)
+    assert penalty > 0
+    assert a.predicted_reduction == pytest.approx(legacy - penalty)
+
+
+def test_vertical_resize_respects_min_cores_floor():
+    cfg = PolicyConfig(min_offline_cores=4.0)
+    policy = MitigationPolicy(_cheap_quantifier(), cfg)
+    c = Cluster(num_nodes=2, seed=0)
+    small = _offline_pod(6.0)   # 6 * 0.5 = 3 < 4: would shrink past the floor
+    big = _offline_pod(12.0)    # 12 * 0.5 = 6 >= 4: still throttleable
+    assert c.place(small, 0) and c.place(big, 0)
+    c.rollout(10)
+    cands = policy._candidates(c, c.nodes_data(), 0, np.array([True, False]))
+    resized = {a.uid for a in cands if isinstance(a, VerticalResize)}
+    assert big.uid in resized
+    assert small.uid not in resized  # no unbounded re-throttling toward zero
+    # eviction of the small job is still on the table
+    assert small.uid in {a.uid for a in cands if isinstance(a, EvictOffline)}
+
+
+def test_policy_attribution_overrides_heuristics():
+    """With per-slot drift scores, the drifted pod is the victim even when
+    the heaviest-pressure / highest-QPS heuristics point elsewhere."""
+    c = Cluster(num_nodes=2, seed=0)
+    heavy = _offline_pod(12.0)   # pressure heuristic's pick
+    light = _offline_pod(4.0)    # attribution's pick
+    hi_qps = _online_pod(500.0)  # QPS heuristic's pick
+    lo_qps = _online_pod(300.0)  # attribution's pick
+    for p in (heavy, light, hi_qps, lo_qps):
+        assert c.place(p, 0)
+    c.rollout(10)
+    policy = MitigationPolicy(_cheap_quantifier())
+    data = c.nodes_data()
+    hot = np.array([True, False])
+    slots = {uid: c._pod_slots[uid][2] for uid in
+             (heavy.uid, light.uid, hi_qps.uid, lo_qps.uid)}
+    attribution = np.zeros((2, S_ON + S_OFF))
+    attribution[0, S_ON + slots[light.uid]] = 50.0  # light job drifted
+    attribution[0, slots[lo_qps.uid]] = 50.0        # low-QPS service drifted
+
+    base = policy._candidates(c, data, 0, hot)
+    attr = policy._candidates(c, data, 0, hot, attribution=attribution)
+    first_off = lambda cands: next(a.uid for a in cands
+                                   if isinstance(a, EvictOffline))
+    victim = lambda cands: next(a.uid for a in cands if isinstance(a, ScaleOut))
+    assert first_off(base) == heavy.uid and victim(base) == hi_qps.uid
+    assert first_off(attr) == light.uid and victim(attr) == lo_qps.uid
+
+
+def test_plan_corrections_demote_action_kind():
+    c = Cluster(num_nodes=4, seed=0)
+    for _ in range(3):
+        assert c.place(_offline_pod(12.0), 0)
+    c.rollout(10)
+    policy = MitigationPolicy(_cheap_quantifier(),
+                              PolicyConfig(budget=10.0, max_actions_per_node=4))
+    hot = np.array([True, False, False, False])
+    data = c.nodes_data()
+    base = policy.plan(c, data, hot)
+    assert any(isinstance(a, EvictOffline) for a in base)
+    demoted = policy.plan(c, data, hot, corrections={"evict_offline": 0.0})
+    assert not any(isinstance(a, EvictOffline) for a in demoted)
+
+
 # ---------------- retry queue ----------------
 
 class _FlakyScheduler:
@@ -286,15 +456,106 @@ def test_control_loop_idle_on_calm_cluster():
     assert loop.stats.actions_applied == 0
 
 
+def _overloaded_cluster(seed=5, num_nodes=4):
+    c = Cluster(num_nodes=num_nodes, seed=seed)
+    assert c.place(_online_pod(400.0), 0)
+    for _ in range(3):
+        assert c.place(_offline_pod(12.0, duration=2000), 0)
+    c.rollout(10)
+    return c
+
+
+def test_verification_learns_per_kind_corrections():
+    c = _overloaded_cluster()
+    loop = ControlLoop(_cheap_quantifier())
+    for _ in range(8):
+        c.rollout(10)
+        loop.step(c)
+    s = loop.stats
+    assert s.actions_applied > 0
+    assert s.actions_verified > 0
+    assert s.predicted_reduction > 0
+    assert np.isfinite(s.realized_reduction)
+    assert s.calibration_error() >= 0
+    # at least one applied kind was re-calibrated away from 1.0, within clamps
+    assert loop.corrections
+    cfg = loop.cfg
+    for kind, corr in loop.corrections.items():
+        assert cfg.corr_min <= corr <= cfg.corr_max
+        assert kind in s.by_kind
+    # history carries the realized-vs-predicted record
+    verified = [v for h in loop.history for v in h["verified"]]
+    assert len(verified) == s.actions_verified
+    assert all(np.isfinite(v["realized"]) for v in verified)
+
+
+def test_loop_resets_on_new_cluster_of_same_size():
+    """Regression: reusing a loop on a new same-size cluster used to carry
+    detector state, cooldown maps, and pending flags silently."""
+    loop = ControlLoop(_cheap_quantifier())
+    c1 = _overloaded_cluster(seed=5)
+    for _ in range(6):
+        c1.rollout(10)
+        loop.step(c1)
+    assert loop.stats.actions_applied > 0
+    assert loop._uid_last_acted  # cooldown state from cluster 1
+    steps_c1 = int(loop.detector.steps)
+    assert steps_c1 > 1
+
+    c2 = Cluster(num_nodes=c1.n, seed=9)  # same size, different cluster
+    c2.rollout(10)
+    loop.step(c2)
+    assert int(loop.detector.steps) == 1  # fresh detector, not c1 leftovers
+    assert not loop._uid_last_acted       # stale pod ids dropped
+    assert not loop._pending
+
+
+def test_run_experiment_reports_per_run_mitigation_delta():
+    """Regression: a reused loop keeps lifetime stats; each run must report
+    its own delta, not the cumulative count."""
+    pods, gaps = bursty_trace(num_online=6, num_bursts=2, jobs_per_burst=2, seed=1)
+    loop = ControlLoop(_cheap_quantifier())
+    r1 = run_experiment(ICOScheduler(_cheap_quantifier()), pods, gaps,
+                        num_nodes=6, seed=3, settle_ticks=10, control_loop=loop)
+    r2 = run_experiment(ICOScheduler(_cheap_quantifier()), pods, gaps,
+                        num_nodes=6, seed=3, settle_ticks=10, control_loop=loop)
+    assert r1.mitigations > 0
+    assert r1.mitigations + r2.mitigations == loop.stats.actions_applied
+    assert (r1.predicted_reduction + r2.predicted_reduction
+            == pytest.approx(loop.stats.predicted_reduction))
+    assert (r1.realized_reduction + r2.realized_reduction
+            == pytest.approx(loop.stats.realized_reduction))
+
+
 def test_run_experiment_with_control_loop_integration():
     pods, gaps = bursty_trace(num_online=6, num_bursts=2, jobs_per_burst=2, seed=1)
     q = _cheap_quantifier()
     loop = ControlLoop(_cheap_quantifier())
     r = run_experiment(ICOScheduler(q), pods, gaps, num_nodes=6, seed=3,
                        settle_ticks=10, control_loop=loop)
-    assert r.mitigations == loop.stats.actions_applied
+    assert r.mitigations == loop.stats.actions_applied  # fresh loop: delta == lifetime
     assert r.placed + r.rejected == len(pods)
     assert np.isfinite(r.p99_rt)
+
+
+class _CheapPredictor:
+    """Predicted pod runqlat := the node's current runqlat_avg feature."""
+
+    @staticmethod
+    def predict(X):
+        return X[:, 21]
+
+
+def test_compare_schedulers_threads_a_loop_per_scheduler():
+    pods, gaps = bursty_trace(num_online=5, num_bursts=1, jobs_per_burst=2, seed=1)
+    res = compare_schedulers(num_nodes=6, seed=3, predictor=_CheapPredictor(),
+                             control=True, trace=(pods, gaps))
+    assert set(res) == {"ICO", "RR", "HUP", "LQP"}
+    for r in res.values():
+        assert np.isfinite(r.p99_rt)
+        assert r.mitigations >= 0
+        assert np.isfinite(r.predicted_reduction)
+        assert np.isfinite(r.realized_reduction)
 
 
 def test_core_reexports_control_api():
