@@ -1,20 +1,32 @@
-"""Runtime mitigation benchmark: every scheduler with and without the
-verified ControlLoop, on bursty offline load, across several trace seeds.
+"""Runtime mitigation benchmark: per-scheduler profiles and the proactive
+forecast channel, on bursty offline load, across several trace seeds.
 
-Initial placement sees a calm cluster; recurring waves of bursty offline
-jobs then create the interference a placement-only scheduler cannot
-correct.  For each of ICO / RR / HUP / LQP the trace is replayed twice —
-plain, and paired with a fresh ControlLoop — and the report carries:
+Two grids:
 
-  * per-scheduler mean p99/avg RT with and without mitigation (the
-    headline is the p99 gap the closed loop recovers for ICO, per seed);
-  * cost-model calibration: total predicted vs realized runqlat reduction,
-    the mean relative error, and the per-kind correction factors the
-    verification pass learned online.
+* **Profile grid** (always) — every scheduler (ICO / RR / HUP / LQP) with
+  and without a fresh ControlLoop built from its *tuned* per-scheduler
+  profile (``scheduler_loop_config``), on the PR-2 short bursty traces.
+  The acceptance bars here: ICO+control keeps beating plain ICO, and the
+  conservative RR/HUP profiles make mitigation non-harmful on the seeds
+  where the one-size-fits-all config regressed.
+
+* **Proactive axis** (``--proactive``) — ICO replayed three ways on
+  day-scale bursty traces (reactive mitigation needs nothing new; the
+  seasonal forecaster needs to observe ≈ a full diurnal period before its
+  extrapolation-leverage gate opens): no mitigation, reactive mitigation,
+  and proactive mitigation (forecast channel on).  Inter-arrival gaps are
+  sliced into ``control_window``-tick windows so the loop acts on a
+  uniform cadence inside the long gaps.  Reported per seed: the p99 of
+  each mode, proactive flag/action counts, and the forecaster's one-step
+  calibration error.
+
+Cost-model calibration (total predicted vs realized reduction, per-kind
+corrections) is carried exactly as before.
 
 ``--json PATH`` additionally dumps the full grid as a machine-readable
 artifact (CI uploads it as BENCH_control.json so the perf trajectory of
-the control plane is tracked per commit).
+the control plane — including the reactive-vs-proactive p99 delta — is
+tracked per commit).
 """
 from __future__ import annotations
 
@@ -28,24 +40,22 @@ from repro.cluster.experiment import (
     run_experiment,
     train_default_predictor,
 )
-from repro.control import ControlLoop
+from repro.control import ControlLoop, scheduler_loop_config
 from repro.core import InterferenceQuantifier
 
 SCHEDULERS = ("ICO", "RR", "HUP", "LQP")
+
+# the proactive axis needs day-scale traces: the forecaster's leverage gate
+# only trusts extrapolation once ~a full diurnal period has been observed
+PROACTIVE_TRACE = dict(num_online=14, num_bursts=26, burst_gap=(140, 210))
+CONTROL_WINDOW = 40
 
 
 def _mean(xs):
     return sum(xs) / len(xs)
 
 
-def run(fast: bool = True, json_path: str | None = None):
-    num_placements = 80 if fast else 250
-    # (trace_seed, sim_seed) pairs: the acceptance bar is ICO+control
-    # beating plain ICO on p99 at >= 2 independent seeds
-    seeds = [(0, 11), (1, 12)] if fast else [(0, 11), (1, 12), (2, 13)]
-    rf_seed = 7
-    predictor = train_default_predictor(seed=rf_seed, num_placements=num_placements)
-
+def _profile_grid(predictor, seeds, out, json_doc):
     grid: dict[str, dict[str, list]] = {
         name: {"off": [], "on": []} for name in SCHEDULERS
     }
@@ -60,14 +70,17 @@ def run(fast: bool = True, json_path: str | None = None):
             # any other scheduler state) must not leak between the with-
             # and without-mitigation replays of the same trace
             for name, sched in make_schedulers(predictor).items():
-                loop = (ControlLoop(InterferenceQuantifier(predictor.predict))
-                        if with_control else None)
+                loop = None
+                if with_control:
+                    loop = ControlLoop(
+                        InterferenceQuantifier(predictor.predict),
+                        scheduler_loop_config(name),
+                    )
                 t0 = time.time()
                 r = run_experiment(sched, pods, gaps, num_nodes=12,
                                    seed=sim_seed, control_loop=loop)
                 times_us.setdefault(name, []).append((time.time() - t0) * 1e6)
-                mode = "on" if with_control else "off"
-                grid[name][mode].append(r)
+                grid[name]["on" if with_control else "off"].append(r)
                 if loop is not None:
                     calib["predicted"] += r.predicted_reduction
                     calib["realized"] += r.realized_reduction
@@ -75,7 +88,6 @@ def run(fast: bool = True, json_path: str | None = None):
                     for kind, corr in loop.corrections.items():
                         corrections.setdefault(kind, []).append(corr)
 
-    out = []
     for name in SCHEDULERS:
         p99_off = _mean([r.p99_rt for r in grid[name]["off"]])
         p99_on = _mean([r.p99_rt for r in grid[name]["on"]])
@@ -91,7 +103,8 @@ def run(fast: bool = True, json_path: str | None = None):
             f"mitigations={mits};p99_gain={gain:+.1f}%",
         ))
 
-    # the acceptance bar, per seed: calibrated ICO+control beats plain ICO
+    # acceptance bars, per seed: ICO+control beats plain ICO; the tuned
+    # RR/HUP profiles keep mitigation non-harmful (p99 delta <= 0-ish)
     for i, (trace_seed, sim_seed) in enumerate(seeds):
         off, on = grid["ICO"]["off"][i], grid["ICO"]["on"][i]
         out.append((
@@ -100,6 +113,15 @@ def run(fast: bool = True, json_path: str | None = None):
             f"p99_off={off.p99_rt:.2f};p99_on={on.p99_rt:.2f};"
             f"win={on.p99_rt < off.p99_rt}",
         ))
+    for name in ("RR", "HUP"):
+        for i, (trace_seed, _) in enumerate(seeds):
+            off, on = grid[name]["off"][i], grid[name]["on"][i]
+            out.append((
+                f"control.profile.{name}.seed{trace_seed}",
+                0.0,
+                f"p99_off={off.p99_rt:.2f};p99_on={on.p99_rt:.2f};"
+                f"non_harmful={on.p99_rt <= off.p99_rt}",
+            ))
 
     rel_err = (abs(calib["realized"] - calib["predicted"])
                / max(calib["predicted"], 1e-9))
@@ -112,33 +134,103 @@ def run(fast: bool = True, json_path: str | None = None):
         f"rel_err={rel_err:.2f};mitigations={calib['mitigations']};{corr_str}",
     ))
 
-    if json_path:
-        doc = {
-            "seeds": seeds,
-            "fast": fast,
-            "grid": {
-                name: {
-                    mode: [
-                        {"p99_rt": r.p99_rt, "avg_rt": r.avg_rt,
-                         "p90_rt": r.p90_rt, "placed": r.placed,
-                         "rejected": r.rejected, "mitigations": r.mitigations,
-                         "predicted_reduction": r.predicted_reduction,
-                         "realized_reduction": r.realized_reduction}
-                        for r in runs
-                    ]
-                    for mode, runs in modes.items()
-                }
-                for name, modes in grid.items()
-            },
-            "calibration": {
-                "predicted": calib["predicted"],
-                "realized": calib["realized"],
-                "rel_err": rel_err,
-                "corrections": {k: _mean(v) for k, v in corrections.items()},
-            },
+    json_doc["grid"] = {
+        name: {
+            mode: [
+                {"p99_rt": r.p99_rt, "avg_rt": r.avg_rt,
+                 "p90_rt": r.p90_rt, "placed": r.placed,
+                 "rejected": r.rejected, "mitigations": r.mitigations,
+                 "proactive_mitigations": r.proactive_mitigations,
+                 "predicted_reduction": r.predicted_reduction,
+                 "realized_reduction": r.realized_reduction}
+                for r in runs
+            ]
+            for mode, runs in modes.items()
         }
+        for name, modes in grid.items()
+    }
+    json_doc["calibration"] = {
+        "predicted": calib["predicted"],
+        "realized": calib["realized"],
+        "rel_err": rel_err,
+        "corrections": {k: _mean(v) for k, v in corrections.items()},
+    }
+
+
+def _proactive_axis(predictor, seeds, out, json_doc):
+    modes = ("off", "reactive", "proactive")
+    rows = []
+    fcals = []
+    for trace_seed, sim_seed in seeds:
+        pods, gaps = bursty_trace(seed=trace_seed, **PROACTIVE_TRACE)
+        row = {"trace_seed": trace_seed, "sim_seed": sim_seed}
+        for mode in modes:
+            loop = None
+            if mode != "off":
+                loop = ControlLoop(
+                    InterferenceQuantifier(predictor.predict),
+                    scheduler_loop_config("ICO",
+                                          proactive=(mode == "proactive")),
+                )
+            r = run_experiment(make_schedulers(predictor)["ICO"], pods, gaps,
+                               num_nodes=12, seed=sim_seed, control_loop=loop,
+                               control_window=CONTROL_WINDOW)
+            row[mode] = {"p99_rt": r.p99_rt, "avg_rt": r.avg_rt,
+                         "mitigations": r.mitigations,
+                         "proactive_mitigations": r.proactive_mitigations}
+            if mode == "proactive" and loop is not None:
+                row["proactive_flags"] = loop.stats.proactive_flagged
+                if loop.forecaster is not None:
+                    fcal = loop.forecaster.calibration_error()
+                    row["forecast_calibration"] = fcal
+                    fcals.append(fcal)
+        rows.append(row)
+        out.append((
+            f"control.proactive.ICO.seed{trace_seed}",
+            0.0,
+            f"p99_off={row['off']['p99_rt']:.2f};"
+            f"p99_reactive={row['reactive']['p99_rt']:.2f};"
+            f"p99_proactive={row['proactive']['p99_rt']:.2f};"
+            f"pro_actions={row['proactive']['proactive_mitigations']};"
+            f"win={row['proactive']['p99_rt'] <= row['reactive']['p99_rt']}",
+        ))
+    means = {m: _mean([r[m]["p99_rt"] for r in rows]) for m in modes}
+    out.append((
+        "control.proactive.summary",
+        0.0,
+        f"mean_p99_off={means['off']:.2f};"
+        f"mean_p99_reactive={means['reactive']:.2f};"
+        f"mean_p99_proactive={means['proactive']:.2f};"
+        f"proactive_beats_reactive={means['proactive'] <= means['reactive']};"
+        f"forecast_calibration={_mean(fcals) if fcals else float('nan'):.3f}",
+    ))
+    json_doc["proactive"] = {
+        "control_window": CONTROL_WINDOW,
+        "trace": PROACTIVE_TRACE,
+        "rows": rows,
+        "mean_p99": means,
+        "forecast_calibration": _mean(fcals) if fcals else None,
+    }
+
+
+def run(fast: bool = True, json_path: str | None = None,
+        proactive: bool = False):
+    num_placements = 80 if fast else 250
+    # (trace_seed, sim_seed) pairs: the acceptance bar is ICO+control
+    # beating plain ICO on p99 at >= 2 independent seeds
+    seeds = [(0, 11), (1, 12)] if fast else [(0, 11), (1, 12), (2, 13)]
+    rf_seed = 7
+    predictor = train_default_predictor(seed=rf_seed, num_placements=num_placements)
+
+    out: list = []
+    json_doc: dict = {"seeds": seeds, "fast": fast}
+    _profile_grid(predictor, seeds, out, json_doc)
+    if proactive:
+        _proactive_axis(predictor, seeds, out, json_doc)
+
+    if json_path:
         with open(json_path, "w") as f:
-            json.dump(doc, f, indent=2)
+            json.dump(json_doc, f, indent=2)
     return out
 
 
@@ -148,5 +240,6 @@ if __name__ == "__main__":
     if "--json" in sys.argv:
         i = sys.argv.index("--json")
         json_path = sys.argv[i + 1] if i + 1 < len(sys.argv) else "BENCH_control.json"
-    for row in run(fast=fast, json_path=json_path):
+    for row in run(fast=fast, json_path=json_path,
+                   proactive="--proactive" in sys.argv):
         print(",".join(map(str, row)))

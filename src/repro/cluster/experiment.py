@@ -35,6 +35,7 @@ class ExperimentResult:
     rejected: int
     queued_retries: int = 0   # placements that succeeded via the retry queue
     mitigations: int = 0      # control-loop actions applied DURING THIS RUN
+    proactive_mitigations: int = 0    # subset planned from forecast drift
     predicted_reduction: float = 0.0  # cost-model claim for this run's actions
     realized_reduction: float = 0.0   # what post-action verification observed
 
@@ -71,6 +72,8 @@ def bursty_trace(
     num_bursts: int = 5,
     jobs_per_burst: int = 4,
     seed: int = 0,
+    burst_gap: tuple = (30, 60),
+    job_duration: tuple = (120, 240),
 ):
     """Arrival trace for the runtime-mitigation scenario: a stable fleet of
     online services, then recurring waves of heavy short offline jobs.
@@ -79,6 +82,11 @@ def bursty_trace(
     online fleet reasonably — the interference only materializes when the
     bursts land, which is exactly the regime a placement-only scheduler
     cannot correct and a runtime control loop can.
+
+    ``burst_gap`` (ticks between waves) and ``job_duration`` stretch the
+    trace: the proactive benchmark uses day-scale traces (many waves spread
+    over >= TICKS_PER_DAY) so the seasonal forecaster can observe enough of
+    the diurnal period to pass its extrapolation-leverage gate.
     """
     rng = np.random.default_rng(seed)
     pods, gaps = [], []
@@ -98,12 +106,13 @@ def bursty_trace(
             # mid-size requests: small enough to pass admission on a loaded
             # cluster, bursty enough (burst_range up to 2.1x) to hurt later
             cores = float(prof.cores_choices[-2])
-            pod = Pod(name, 0.0, False, duration=int(rng.integers(120, 240)))
+            pod = Pod(name, 0.0, False, duration=int(rng.integers(*job_duration)))
             pod.cpu_demand = cores
             pod.mem_demand = cores * prof.mem_per_core
             pods.append(pod)
             # jobs inside a burst arrive back-to-back; bursts are spread out
-            gaps.append(2 if j < jobs_per_burst - 1 else int(rng.integers(30, 60)))
+            gaps.append(2 if j < jobs_per_burst - 1
+                        else int(rng.integers(*burst_gap)))
     return pods, gaps
 
 
@@ -116,6 +125,7 @@ def run_experiment(
     settle_ticks: int = 40,
     *,
     control_loop=None,
+    control_window: int | None = None,
     retry_limit: int = 8,
     retry_attempts: int = 3,
 ) -> ExperimentResult:
@@ -128,6 +138,15 @@ def run_experiment(
         with the same tick cadence the scheduler sees.  Mitigation counters
         in the result are per-run deltas: a reused loop keeps cumulative
         lifetime stats, and reporting those directly would overcount.
+    control_window: with a control loop, slice each inter-arrival rollout
+        into windows of at most this many ticks and step the loop after
+        every slice.  Day-scale traces have gaps of hundreds of ticks;
+        stepping only at arrival boundaries would let whole incidents rise
+        and fade between two control iterations, and would feed the
+        detector/forecaster telemetry windows of wildly uneven length.
+        Slicing leaves the simulation stream untouched (rollout chunks the
+        same ticks identically), so results stay comparable with unsliced
+        runs of the same seed.  RT is still sampled before every loop step.
     retry_limit / retry_attempts: Algorithm 1 queues a pod when no node is
         feasible; rejected pods are re-offered at each subsequent arrival
         tick, up to ``retry_attempts`` times, from a queue bounded at
@@ -135,10 +154,11 @@ def run_experiment(
     """
     if control_loop is not None and not hasattr(control_loop, "step"):
         control_loop = control_loop()  # factory -> fresh per-run instance
-    stats0 = (0, 0.0, 0.0)
+    stats0 = (0, 0, 0.0, 0.0)
     if control_loop is not None:
         s = control_loop.stats
-        stats0 = (s.actions_applied, s.predicted_reduction, s.realized_reduction)
+        stats0 = (s.actions_applied, s.proactive_applied,
+                  s.predicted_reduction, s.realized_reduction)
     cluster = Cluster(num_nodes=num_nodes, seed=seed)
     cluster.rollout(30)
     rt_all: list[np.ndarray] = []
@@ -162,6 +182,33 @@ def run_experiment(
             else:
                 retry_q.append((qpod, failed + 1))
 
+    def advance(ticks: int, record_util: bool = True) -> None:
+        """Roll forward, sampling RT (and stepping the loop) per window.
+
+        Measure BEFORE mitigating: migration frees the source slot, and
+        sampling afterwards would silently drop the migrated pod's (worst)
+        samples from this window, biasing the mitigation-on distribution.
+        The settle phase records RT but not the util series (Figs. 14-15
+        average cross-node balance over the arrival phase only).
+        """
+        while ticks > 0:
+            w = ticks
+            if control_loop is not None and control_window is not None:
+                w = min(control_window, ticks)
+            t0 = cluster.t
+            cluster.rollout(w)
+            rt_all.append(cluster.online_rt_samples())
+            if record_util:
+                cpu_series.append(cluster.last["cpu_util"])
+                mem_series.append(cluster.last["mem_util"])
+            if control_loop is not None:
+                control_loop.step(cluster)
+            # count the ticks actually simulated: rollout rounds up to CHUNK
+            # multiples, and decrementing by the request would re-simulate
+            # the rounding overshoot and diverge from an unsliced replay
+            progress = int(cluster.t - t0)
+            ticks -= progress if progress > 0 else w
+
     for pod, gap in zip(pods, gaps):
         pod = dataclasses.replace(pod)  # fresh copy per scheduler
         # one telemetry snapshot per tick: every offer this tick (queued
@@ -174,34 +221,24 @@ def run_experiment(
             retry_q.append((pod, 0))
         else:
             rejected += 1
-        cluster.rollout(gap)
-        # measure BEFORE mitigating: migration frees the source slot, and
-        # sampling afterwards would silently drop the migrated pod's (worst)
-        # samples from this window, biasing the mitigation-on distribution
-        rt_all.append(cluster.online_rt_samples())
-        cpu_series.append(cluster.last["cpu_util"])
-        mem_series.append(cluster.last["mem_util"])
-        if control_loop is not None:
-            control_loop.step(cluster)
+        advance(gap)
 
     drain_retries(cluster.nodes_data())
     rejected += len(retry_q)  # still queued at trace end: never placed
-    cluster.rollout(settle_ticks)
-    rt_all.append(cluster.online_rt_samples())
-    if control_loop is not None:
-        control_loop.step(cluster)
+    advance(settle_ticks, record_util=False)
     rt = np.concatenate([r for r in rt_all if r.size] or [np.zeros(0)])
     if rt.size == 0:
         rt = np.full(1, np.nan)  # no online pod ever ran
     cpu = np.stack(cpu_series)  # (T, N)
     mem = np.stack(mem_series)
     if control_loop is None:
-        mitigations, predicted, realized = 0, 0.0, 0.0
+        mitigations, proactive, predicted, realized = 0, 0, 0.0, 0.0
     else:
         s = control_loop.stats
         mitigations = s.actions_applied - stats0[0]
-        predicted = s.predicted_reduction - stats0[1]
-        realized = s.realized_reduction - stats0[2]
+        proactive = s.proactive_applied - stats0[1]
+        predicted = s.predicted_reduction - stats0[2]
+        realized = s.realized_reduction - stats0[3]
     return ExperimentResult(
         scheduler=scheduler.name,
         avg_rt=float(rt.mean()),
@@ -213,6 +250,7 @@ def run_experiment(
         rejected=rejected,
         queued_retries=queued_retries,
         mitigations=mitigations,
+        proactive_mitigations=proactive,
         predicted_reduction=predicted,
         realized_reduction=realized,
     )
@@ -225,6 +263,7 @@ def compare_schedulers(
     predictor=None,
     control: bool = False,
     control_config=None,
+    proactive: bool = False,
     trace: tuple | None = None,
 ) -> dict[str, ExperimentResult]:
     """Figs. 13-15 comparison across ICO / RR / HUP / LQP.
@@ -232,7 +271,11 @@ def compare_schedulers(
     control=True pairs EVERY scheduler with its own fresh
     ``repro.control.ControlLoop`` (built per run from the shared predictor;
     never a shared instance, so detector state, cooldowns, and learned
-    corrections cannot leak across schedulers).  ``trace`` optionally
+    corrections cannot leak across schedulers).  Each scheduler gets its
+    *tuned* profile via ``scheduler_loop_config`` — the guards that win for
+    ICO hurt RR/HUP placements — unless ``control_config`` pins one shared
+    config explicitly.  ``proactive=True`` additionally switches on the
+    forecast channel (ahead-of-time mitigation).  ``trace`` optionally
     replaces the default arrival trace with a pre-built (pods, gaps) pair,
     e.g. ``bursty_trace(...)``.
     """
@@ -242,10 +285,15 @@ def compare_schedulers(
     for name, sched in make_schedulers(predictor).items():
         loop = None
         if control:
-            from repro.control import ControlLoop  # deferred: optional dep cycle
+            from repro.control import (  # deferred: optional dep cycle
+                ControlLoop,
+                scheduler_loop_config,
+            )
 
-            loop = lambda: ControlLoop(  # noqa: E731 - per-run factory
-                InterferenceQuantifier(predictor.predict), control_config)
+            cfg = (control_config if control_config is not None
+                   else scheduler_loop_config(name, proactive=proactive))
+            loop = lambda cfg=cfg: ControlLoop(  # noqa: E731 - per-run factory
+                InterferenceQuantifier(predictor.predict), cfg)
         out[name] = run_experiment(sched, pods, gaps, num_nodes=num_nodes,
                                    seed=seed, control_loop=loop)
     return out

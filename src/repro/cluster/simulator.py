@@ -438,6 +438,20 @@ class Cluster:
         return int(np.asarray(self.state["on_active"]).sum()
                    + np.asarray(self.state["off_active"]).sum())
 
+    def slot_uids(self) -> np.ndarray:
+        """(N, S_ON + S_OFF) tenant uid per slot, -1 when vacant.
+
+        Detector layout (online slots first, offline offset by S_ON): the
+        control plane diffs consecutive snapshots to notice slot reuse —
+        place / migrate / evict all change the tenant — and resets its
+        per-slot attribution and forecast state for exactly those slots.
+        """
+        self.reconcile()
+        uids = np.full((self.n, S_ON + S_OFF), -1, np.int64)
+        for uid, (kind, node, s) in self._pod_slots.items():
+            uids[node, s if kind == "on" else S_ON + s] = uid
+        return uids
+
     # ---------------- simulation ----------------
 
     CHUNK = 10  # fixed scan length -> exactly one XLA compilation
@@ -485,6 +499,10 @@ class Cluster:
         # per-slot histograms in detector layout: online slots [0, S_ON),
         # offline slots [S_ON, S_ON + S_OFF) — per-pod attribution keys on it
         slot_hists = np.concatenate([s["hist_on"], s["hist_off"]], axis=1)
+        off_active = np.asarray(self.state["off_active"])
+        off_pressure = (np.asarray(self.state["off_cores"])
+                        * np.asarray(self.state["off_burst"])
+                        * off_active).sum(-1)
         return {
             "cpu_cur": s["cpu_demand"],
             "cpu_sum": np.asarray(self.state["cpu_sum"]),
@@ -494,7 +512,11 @@ class Cluster:
             "offline_hists": s["hist_off"],
             "slot_hists": slot_hists,
             "features": features,
+            "online_qps": s["qps"],          # (N, S_ON) window-mean per slot
             "online_qps_sum": (s["qps"] * on_active).sum(-1),
+            "on_active": on_active,
+            "on_type": np.asarray(self.state["on_type"]),
+            "off_pressure": off_pressure,    # burst-weighted offline cores
             "cpu_util": s["cpu_util"],
             "mem_util": s["mem_util"],
         }

@@ -34,6 +34,14 @@ The loop has four stages; the first three are their own module:
       replica), vertical-resize (throttle a batch job's cores, work
       conserved).  Each carries a cost estimate the budget constrains.
 
+  forecast (``forecast``) — an online seasonal forecaster (per-pod decayed
+      diurnal-harmonic regression on observed QPS, all pods in one jit'd
+      call) projects node runqlat ``horizon`` windows ahead through the
+      delay-curve model; the detector's forecast-CUSUM channel turns
+      predicted drift into *proactive* flags, gated on forecast confidence,
+      so mitigation can land before the hotspot's worst window instead of
+      after its leading edge.
+
   verify  (``loop``) — one telemetry window after acting, each action's
       ``predicted_reduction`` is compared against the runqlat delta the
       node actually showed; an online per-kind multiplicative correction
@@ -53,7 +61,18 @@ from repro.control.actions import (
     VerticalResize,
 )
 from repro.control.detector import DetectorConfig, StreamingDetector
-from repro.control.loop import ControlLoop, ControlLoopConfig, ControlStats
+from repro.control.forecast import (
+    ForecastConfig,
+    QPSForecaster,
+    project_node_pressure,
+)
+from repro.control.loop import (
+    ControlLoop,
+    ControlLoopConfig,
+    ControlStats,
+    SCHEDULER_PROFILES,
+    scheduler_loop_config,
+)
 from repro.control.policy import MitigationPolicy, PolicyConfig, node_delay_curve
 
 __all__ = [
@@ -64,9 +83,14 @@ __all__ = [
     "VerticalResize",
     "DetectorConfig",
     "StreamingDetector",
+    "ForecastConfig",
+    "QPSForecaster",
+    "project_node_pressure",
     "ControlLoop",
     "ControlLoopConfig",
     "ControlStats",
+    "SCHEDULER_PROFILES",
+    "scheduler_loop_config",
     "MitigationPolicy",
     "PolicyConfig",
     "node_delay_curve",

@@ -19,6 +19,10 @@ Applied actions double as verification records: the ControlLoop stamps
 time) and, one step later, ``realized_reduction`` (the observed delta,
 attributed across same-node actions proportionally to their predictions).
 The realized/predicted ratio feeds the loop's per-kind online correction.
+Actions planned from *forecast* drift carry ``proactive=True``: they are
+cheaper in the greedy ranking (the pod moves before its worst window) and
+skip verification, since the window they target has not happened yet and
+the next window's delta would read as a spurious miss.
 """
 from __future__ import annotations
 
@@ -35,6 +39,10 @@ class Action:
     node: int
     cost: float = 0.0
     predicted_reduction: float = 0.0
+    proactive: bool = False             # planned from forecast drift, before
+                                        # the hotspot formed (cheaper, and
+                                        # exempt from post-action verification
+                                        # — the window it targets is ahead)
     pre_runqlat: float = math.nan       # source node avg runqlat at apply time
     realized_reduction: float = math.nan  # observed delta, one step later
 
@@ -46,8 +54,9 @@ class Action:
     def describe(self) -> str:
         realized = ("" if math.isnan(self.realized_reduction)
                     else f", realized={self.realized_reduction:.1f}")
+        tag = ", proactive" if self.proactive else ""
         return (f"{self.kind}(node={self.node}, cost={self.cost:.2f}, "
-                f"pred_reduction={self.predicted_reduction:.1f}{realized})")
+                f"pred_reduction={self.predicted_reduction:.1f}{realized}{tag})")
 
 
 @dataclasses.dataclass

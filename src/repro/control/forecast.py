@@ -1,0 +1,224 @@
+"""Online seasonal QPS forecaster driving proactive mitigation.
+
+The reactive control loop only acts after a node's runqlat has already
+drifted, so online pods eat the full latency of every incident's leading
+edge.  The QPS traces the simulator replays carry a dominant diurnal
+component plus a half-day harmonic (``repro.cluster.trace``), which makes
+the near future of each pod's load trivially forecastable — and the
+delay-curve model already maps load to runqlat.  This module closes that
+gap:
+
+*Forecaster* — every pod keeps a decayed least-squares regression of its
+observed window-mean QPS onto diurnal harmonic features
+
+    x(t) = [1, sin wt, cos wt, sin 2wt, cos 2wt],   w = 2*pi / TICKS_PER_DAY
+
+with moments A = sum decay^k x x^T and b = sum decay^k x y, so the fit
+tracks the recent trace rather than the whole run.  The update — one-step
+error scoring of the previous fit, then the moment update — runs for all
+(node, slot) pods in a single jit'd call, mirroring the detector's
+no-Python-loop style; ``forecast(t')`` solves the (ridge-regularized)
+normal equations batched and evaluates the harmonics at the future time.
+
+*Confidence gate* — a forecast is only trusted after ``min_windows``
+observations AND while the EWMA of the one-step relative prediction error
+stays under ``max_rel_err``.  Pods failing the gate contribute their
+*current* QPS to any projection, i.e. they predict "no change" rather than
+noise; this is what keeps a noisy or newly-landed pod from churning the
+proactive channel.
+
+*Projection* — ``project_node_pressure`` pushes per-slot QPS (observed or
+forecast) through the same linear resource model and M/G/1-PS delay curve
+the simulator and the mitigation policy use, giving the node runqlat the
+model expects at that load.  The ControlLoop feeds the detector the
+*difference* between the projections at forecast and current QPS, added to
+the observed window average — a bias-free drift estimate (any systematic
+model/observation offset cancels) on which the detector's forecast-CUSUM
+channel raises ``proactive`` flags before the hotspot materializes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster import simulator as sim
+from repro.cluster.workloads import online_arrays
+
+NUM_FEATURES = 5  # [1, sin wt, cos wt, sin 2wt, cos 2wt]
+_OMEGA = 2.0 * np.pi / sim.TICKS_PER_DAY
+
+
+@dataclasses.dataclass(frozen=True)
+class ForecastConfig:
+    decay: float = 0.995      # per-window decay of the regression moments;
+                              # the memory (~1/(1-decay) windows) must span
+                              # at least one diurnal period or the fit only
+                              # ever sees a short arc and extrapolates wildly
+    ridge: float = 1.0        # Tikhonov term on the normal-equation solve
+    err_alpha: float = 0.3    # EWMA rate of the one-step relative error
+    min_windows: int = 6      # observations before a pod's fit is trusted
+    max_rel_err: float = 0.25 # confidence gate on the one-step rel. error
+    qps_floor: float = 25.0   # rel-error denominator floor (QPS units)
+    max_leverage: float = 0.1 # extrapolation guard: leverage of the forecast
+                              # time, x' (A + ridge*I)^-1 x.  Until the data
+                              # covers enough of the period, the harmonic
+                              # basis is under-determined in the forecast
+                              # direction and the fit extrapolates steeply
+                              # where the truth is flat — the one-step error
+                              # (interpolation) cannot see this, leverage can
+    rho_cap: float = 0.85     # ceiling on the *forecast* pressure: past it
+                              # the delay curve is near its asymptote and a
+                              # few percent of QPS forecast error explodes
+                              # into hundreds of latency-units of phantom
+                              # drift/relief, buying migrations reality
+                              # never justifies
+    min_predicted_drift: float = 3.0   # projected runqlat increase (latency
+                                       # units) under which a node's forecast
+                                       # is withheld from the proactive
+                                       # channel: without this gate every
+                                       # node near the reactive threshold
+                                       # tips "proactive" on a flat forecast,
+                                       # and the channel degenerates into a
+                                       # lower-bar reactive detector
+
+
+def _features(t):
+    wt = _OMEGA * t
+    return jnp.stack([jnp.ones_like(wt), jnp.sin(wt), jnp.cos(wt),
+                      jnp.sin(2.0 * wt), jnp.cos(2.0 * wt)], axis=-1)
+
+
+def _solve(A, b, ridge):
+    eye = jnp.eye(NUM_FEATURES, dtype=A.dtype)
+    return jnp.linalg.solve(A + ridge * eye, b[..., None])[..., 0]
+
+
+@jax.jit
+def _forecast_update(A, b, err, count, t, y, active, decay, ridge, alpha,
+                     qps_floor):
+    """Score the previous fit at time t, then fold in the new observation.
+
+    A (N, S, F, F), b (N, S, F), err/count (N, S); y (N, S) window-mean QPS,
+    active (N, S) bool.  Returns the new state plus the one-step prediction
+    the *old* fit made for this window (the calibration signal).
+    """
+    x = _features(t)                                   # (F,)
+    pred = jnp.maximum((_solve(A, b, ridge) * x).sum(-1), 0.0)
+    rel = jnp.abs(pred - y) / jnp.maximum(y, qps_floor)
+    scored = active & (count > 0)
+    err = jnp.where(scored, (1.0 - alpha) * err + alpha * rel, err)
+    xx = x[:, None] * x[None, :]
+    A = jnp.where(active[..., None, None], decay * A + xx, A)
+    b = jnp.where(active[..., None], decay * b + x * y[..., None], b)
+    count = jnp.where(active, count + 1, count)
+    return A, b, err, count, pred
+
+
+@jax.jit
+def _forecast_eval(A, b, t_future, ridge):
+    x = _features(t_future)
+    return jnp.maximum((_solve(A, b, ridge) * x).sum(-1), 0.0)
+
+
+@jax.jit
+def _leverage(A, t_future, ridge):
+    """x' (A + ridge*I)^-1 x at the forecast time, batched over (N, S)."""
+    xb = jnp.broadcast_to(_features(t_future),
+                          A.shape[:-2] + (NUM_FEATURES,))
+    return (xb * _solve(A, xb, ridge)).sum(-1)
+
+
+class QPSForecaster:
+    """Host-side wrapper owning per-(node, slot) forecast state."""
+
+    def __init__(self, num_nodes: int, num_slots: int,
+                 config: ForecastConfig | None = None):
+        self.cfg = config or ForecastConfig()
+        self.n = num_nodes
+        self.s = num_slots
+        self.reset()
+
+    def reset(self) -> None:
+        F = NUM_FEATURES
+        self.A = jnp.zeros((self.n, self.s, F, F), jnp.float32)
+        self.b = jnp.zeros((self.n, self.s, F), jnp.float32)
+        # err starts at 1.0 (fully untrusted) and must be *earned* down
+        # through min_windows good one-step predictions
+        self.err = jnp.ones((self.n, self.s), jnp.float32)
+        self.count = jnp.zeros((self.n, self.s), jnp.int32)
+        self.last_pred: np.ndarray | None = None
+
+    def clear_slots(self, nodes, slots) -> None:
+        """Forget a slot's fit — its tenant changed; the history is not his."""
+        nodes = np.asarray(nodes, np.int64).ravel()
+        slots = np.asarray(slots, np.int64).ravel()
+        if nodes.size == 0:
+            return
+        idx = (jnp.asarray(nodes), jnp.asarray(slots))
+        self.A = self.A.at[idx].set(0.0)
+        self.b = self.b.at[idx].set(0.0)
+        self.err = self.err.at[idx].set(1.0)
+        self.count = self.count.at[idx].set(0)
+
+    def update(self, t: float, qps, active) -> np.ndarray:
+        """Feed one window's mean QPS; returns the one-step EWMA errors."""
+        c = self.cfg
+        qps = jnp.asarray(qps, jnp.float32)
+        active = jnp.asarray(active, bool)
+        self.A, self.b, self.err, self.count, pred = _forecast_update(
+            self.A, self.b, self.err, self.count, jnp.float32(t), qps, active,
+            c.decay, c.ridge, c.err_alpha, c.qps_floor,
+        )
+        self.last_pred = np.asarray(pred)
+        return np.asarray(self.err)
+
+    def forecast(self, t_future: float) -> np.ndarray:
+        """Per-pod QPS the harmonic fits project at a future tick time."""
+        return np.asarray(_forecast_eval(
+            self.A, self.b, jnp.float32(t_future), self.cfg.ridge))
+
+    def confidence(self, t_future: float | None = None) -> np.ndarray:
+        """(N, S) bool: pods whose forecast passes the confidence gate.
+
+        With ``t_future`` the gate also requires low *leverage* at the
+        forecast time — rejecting extrapolations into a direction of the
+        harmonic basis the observed arc has not yet pinned down, which the
+        one-step (interpolation) error is structurally blind to.
+        """
+        c = self.cfg
+        ok = ((np.asarray(self.count) >= c.min_windows)
+              & (np.asarray(self.err) <= c.max_rel_err))
+        if t_future is not None:
+            lev = np.asarray(_leverage(self.A, jnp.float32(t_future), c.ridge))
+            ok &= lev <= c.max_leverage
+        return ok
+
+    def calibration_error(self) -> float:
+        """Mean one-step relative error over pods with enough history."""
+        mature = np.asarray(self.count) >= self.cfg.min_windows
+        if not mature.any():
+            return float("nan")
+        return float(np.asarray(self.err)[mature].mean())
+
+
+def project_node_pressure(data: dict, qps) -> np.ndarray:
+    """Burst-weighted run-queue pressure each node would carry at the given
+    per-slot online QPS (offline pressure taken from the current window).
+
+    Evaluating this at observed vs forecast QPS and differencing the delay
+    curve gives the predicted runqlat drift, free of model bias.
+    """
+    arrs = online_arrays()
+    on_type = np.asarray(data["on_type"])
+    active = np.asarray(data["on_active"], bool)
+    qps = np.asarray(qps, np.float64)
+    cpu_on = np.where(
+        active,
+        arrs["cpu_per_qps"][on_type] * qps + arrs["cpu_base"][on_type],
+        0.0,
+    )
+    pressure = cpu_on.sum(-1) + np.asarray(data["off_pressure"]) + sim.OS_BASE_CORES
+    return pressure / np.asarray(data["cpu_sum"], np.float64)

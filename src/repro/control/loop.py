@@ -15,10 +15,28 @@ policy's greedy ranking, so action kinds that over-promise are demoted and
 the cost model self-calibrates during the run.  Realized-vs-predicted
 totals are surfaced in ``ControlStats`` and per-step ``history`` entries.
 
+The loop is optionally *proactive*: with ``proactive=True`` every step
+feeds each pod's window-mean QPS to an online seasonal forecaster
+(``repro.control.forecast``), projects node runqlat ``horizon`` windows
+ahead through the delay-curve model, and hands the projection to the
+detector's forecast-CUSUM channel.  Flags raised there carry
+``proactive=True``: the policy prices their relief at the *forecast*
+pressure and discounts their cost (the pod moves before its worst window),
+and they are exempt from post-action verification — the window they
+mitigate has not happened yet, so next window's delta would read as a
+spurious miss and poison the per-kind corrections.
+
 ``run(cluster, num_ticks, k)`` interleaves the loop with
 ``Cluster.rollout`` every ``k`` ticks for standalone use; experiment
 drivers that own the rollout cadence (``run_experiment``) just call
 ``step`` at their own tick boundaries.
+
+``scheduler_loop_config`` maps a scheduler name to a tuned
+``ControlLoopConfig``: the default profile was tuned against ICO
+placements, and replaying PR 2's grid showed it can *hurt* RR/HUP — their
+placements leave different headroom patterns, so those schedulers get a
+conservative profile (wider margins, longer cooldowns, smaller budget)
+under which mitigation is non-harmful on the regressing seeds.
 """
 from __future__ import annotations
 
@@ -29,7 +47,12 @@ import numpy as np
 
 from repro.control.actions import Action
 from repro.control.detector import DetectorConfig, StreamingDetector
-from repro.control.policy import MitigationPolicy, PolicyConfig
+from repro.control.forecast import (
+    ForecastConfig,
+    QPSForecaster,
+    project_node_pressure,
+)
+from repro.control.policy import MitigationPolicy, PolicyConfig, node_delay_curve
 from repro.core import metric
 
 
@@ -44,16 +67,25 @@ class ControlLoopConfig:
                              # (seasonal QPS drift, rollout jitter), and an
                              # unlucky sample must not bury a kind for good
     corr_max: float = 2.0    # ... nor credit it more than 2x its prediction
+    proactive: bool = False  # forecast channel + ahead-of-time mitigation
+    horizon: float = 6.0     # how many telemetry windows ahead to project:
+                             # long enough for real diurnal movement (~30 deg
+                             # of phase at the bench cadence), short enough
+                             # that the acted-on window arrives within a few
+                             # cooldown periods
     detector: DetectorConfig = dataclasses.field(default_factory=DetectorConfig)
     policy: PolicyConfig = dataclasses.field(default_factory=PolicyConfig)
+    forecast: ForecastConfig = dataclasses.field(default_factory=ForecastConfig)
 
 
 @dataclasses.dataclass
 class ControlStats:
     steps: int = 0
     hotspots_flagged: int = 0
+    proactive_flagged: int = 0   # forecast-channel flags (predicted drift)
     actions_planned: int = 0
     actions_applied: int = 0
+    proactive_applied: int = 0   # subset of applied planned ahead of time
     actions_verified: int = 0
     verifications_discarded: int = 0  # post-action windows too churned to read
     predicted_reduction: float = 0.0  # sum of predictions of verified actions
@@ -90,12 +122,17 @@ class ControlLoop:
         report per-run deltas (see ``run_experiment``).
         """
         self.detector: StreamingDetector | None = None
+        self.forecaster: QPSForecaster | None = None
         self._cluster_ref = lambda: None
         self._last_acted: dict[int, int] = {}      # node -> step of last action
         self._uid_last_acted: dict[int, int] = {}  # pod uid -> step (anti-ping-pong)
         self._pending: dict[int, int] = {}         # hot node -> step flagged
+        self._pending_pro: dict[int, int] = {}     # forecast-flagged, disjoint
         self._to_verify: list[Action] = []         # applied last step, unchecked
         self._verify_uids: dict[int, frozenset] = {}  # node -> pods right after acting
+        self._slot_uids: np.ndarray | None = None  # last (N, S) tenant snapshot
+        self._last_t: float | None = None          # cluster clock at last step
+        self._dt: float | None = None              # EWMA ticks per window
 
     def _verify(self, cluster, window_avg: np.ndarray) -> list[dict]:
         """Compare last step's actions against the runqlat actually observed.
@@ -147,6 +184,82 @@ class ControlLoop:
         self._verify_uids = {}
         return verified
 
+    def _reconcile_slot_tenants(self, cluster) -> None:
+        """Reset attribution/forecast state for slots whose tenant changed.
+
+        The detector's slot track and the forecaster's per-pod fits are
+        keyed by (node, slot), but slots are reused: the simulator places,
+        migrates, and evicts into them.  Diffing consecutive ``slot_uids``
+        snapshots keys both tracks on the *tenant* — a new arrival starts
+        from a clean slate instead of inheriting the decayed drift score
+        (and being blamed for) its predecessor's incident.
+        """
+        slot_uids = getattr(cluster, "slot_uids", None)
+        if not callable(slot_uids):
+            return
+        uids = slot_uids()
+        prev, self._slot_uids = self._slot_uids, uids
+        if prev is None or prev.shape != uids.shape:
+            return
+        nodes, slots = np.nonzero(uids != prev)
+        if nodes.size == 0:
+            return
+        self.detector.clear_slots(nodes, slots)
+        if self.forecaster is not None:
+            online = slots < self.forecaster.s  # detector layout: online first
+            self.forecaster.clear_slots(nodes[online], slots[online])
+
+    def _forecast(self, cluster, data, window_avg):
+        """Project each node's runqlat ``horizon`` windows ahead.
+
+        Feeds this window's per-pod QPS to the seasonal forecaster, then
+        pushes the forecast QPS through the delay-curve model and returns
+        ``(forecast_avg, forecast_rho)`` — the projected node runqlat
+        (observed average plus the *model delta* between forecast and
+        current load, so any model/observation bias cancels) and the
+        forecast run-queue pressure the policy prices relief at.  Returns
+        ``(None, None)`` while the channel is off or not yet warmed up.
+        """
+        cfg = self.cfg
+        if not cfg.proactive or "online_qps" not in data:
+            return None, None
+        qps_now = np.asarray(data["online_qps"])
+        active = np.asarray(data["on_active"], bool)
+        if self.forecaster is None:
+            self.forecaster = QPSForecaster(
+                cluster.n, qps_now.shape[1], cfg.forecast)
+        t = float(getattr(cluster, "t", 0.0))
+        self.forecaster.update(t, qps_now, active)
+        if self._last_t is not None and t > self._last_t:
+            dt = t - self._last_t
+            self._dt = dt if self._dt is None else 0.5 * self._dt + 0.5 * dt
+        self._last_t = t
+        if self._dt is None:
+            return None, None  # need two windows to know the cadence
+        # difference the fit against ITSELF at t vs t+h, then apply the move
+        # to the observed QPS: the ridge/decay shrinkage that biases the fit
+        # a few percent low cancels out, where comparing fit(t+h) against
+        # the raw observation would read that bias as universal decline
+        t_fut = t + cfg.horizon * self._dt
+        fit_now = self.forecaster.forecast(t)
+        fit_fut = self.forecaster.forecast(t_fut)
+        # confidence gate (incl. extrapolation leverage at the forecast
+        # time): an untrusted pod predicts "no change", not noise
+        trusted = self.forecaster.confidence(t_fut) & active
+        qps_fut = np.where(trusted,
+                           np.maximum(qps_now + fit_fut - fit_now, 0.0),
+                           qps_now)
+        rho_fut = np.minimum(project_node_pressure(data, qps_fut),
+                             cfg.forecast.rho_cap)
+        delta = node_delay_curve(rho_fut) \
+            - node_delay_curve(project_node_pressure(data, qps_now))
+        # only nodes the model says will get MEANINGFULLY worse feed the
+        # proactive channel; the rest get the no-forecast sentinel so their
+        # f_cusum cannot tip on a flat projection of an already-warm node
+        forecast_avg = np.where(delta >= cfg.forecast.min_predicted_drift,
+                                window_avg + delta, -1e9)
+        return forecast_avg, rho_fut
+
     def step(self, cluster) -> list[Action]:
         """One control iteration; returns the actions actually applied."""
         if (self.detector is None or self.detector.n != cluster.n
@@ -159,13 +272,22 @@ class ControlLoop:
         if slot_hists is None:
             slot_hists = np.concatenate(
                 [data["online_hists"], data["offline_hists"]], axis=1)
+        # slot reuse since last step invalidates per-slot tracks: clear them
+        # BEFORE this window's update so the new tenant's first histogram is
+        # scored as an arrival jump, not summed into the predecessor's decay
+        self._reconcile_slot_tenants(cluster)
         # raw last-window node average (NOT the detector's decayed estimate):
         # verification compares like with like across two adjacent windows
         window_avg = np.asarray(metric.avg_runqlat(slot_hists.sum(1)))
         verified = self._verify(cluster, window_avg)
-        hot = self.detector.update(slot_hists)
+        forecast_avg, forecast_rho = self._forecast(cluster, data, window_avg)
+        hot = self.detector.update(slot_hists, forecast_avg)
+        pro = self.detector.last_proactive
+        if pro is None:
+            pro = np.zeros(cluster.n, bool)
         self.stats.steps += 1
         self.stats.hotspots_flagged += int(hot.sum())
+        self.stats.proactive_flagged += int(pro.sum())
 
         # flags consumed on a slower cadence than they are produced stay
         # pending for one acting interval, so interval > 1 can't lose them.
@@ -175,16 +297,26 @@ class ControlLoop:
         # acute p-tail path refires) once telemetry reflects the action
         for node in np.nonzero(hot)[0]:
             self._pending[int(node)] = self.stats.steps
-        self._pending = {n: s for n, s in self._pending.items()
-                         if self.stats.steps - s < self.cfg.interval}
+            self._pending_pro.pop(int(node), None)  # reactive outranks
+        for node in np.nonzero(pro)[0]:
+            if int(node) not in self._pending:
+                self._pending_pro[int(node)] = self.stats.steps
+        keep = lambda d: {n: s for n, s in d.items()  # noqa: E731
+                          if self.stats.steps - s < self.cfg.interval}
+        self._pending = keep(self._pending)
+        self._pending_pro = keep(self._pending_pro)
 
         # a freshly-mitigated node gets cooldown steps for its telemetry to
         # reflect the action before we pile on more mitigations (anti-thrash)
         actionable = np.zeros(cluster.n, bool)
         actionable[list(self._pending)] = True
+        actionable[list(self._pending_pro)] = True
         for node, step in self._last_acted.items():
             if self.stats.steps - step < self.cfg.cooldown:
                 actionable[node] = False
+        proactive_mask = np.zeros(cluster.n, bool)
+        proactive_mask[list(self._pending_pro)] = True
+        proactive_mask &= actionable
 
         applied: list[Action] = []
         if actionable.any() and self.stats.steps % self.cfg.interval == 0:
@@ -195,29 +327,46 @@ class ControlLoop:
             plan = self.policy.plan(cluster, data, actionable,
                                     exclude_uids=recently_acted,
                                     corrections=self.corrections,
-                                    attribution=self.detector.slot_scores)
+                                    attribution=self.detector.attribution(),
+                                    proactive=proactive_mask,
+                                    forecast_pressure=forecast_rho)
             self.stats.actions_planned += len(plan)
             for action in plan:
                 if action.apply(cluster):
                     applied.append(action)
                     action.pre_runqlat = float(window_avg[action.node])
-                    self._to_verify.append(action)
+                    if action.proactive:
+                        # no post-window check: the window this action
+                        # mitigates is horizon steps ahead, and judging it
+                        # on next window's delta would poison the per-kind
+                        # corrections with structurally-absent relief
+                        self.stats.proactive_applied += 1
+                    else:
+                        self._to_verify.append(action)
                     self.stats.actions_applied += 1
                     self.stats.by_kind[action.kind] = (
                         self.stats.by_kind.get(action.kind, 0) + 1
                     )
-                    self._last_acted[action.node] = self.stats.steps
+                    if not action.proactive:
+                        # proactive actions skip the node cooldown: they are
+                        # gentle bets placed BEFORE the worst window, and if
+                        # the incident still develops the reactive track
+                        # must be free to respond immediately — per-pod
+                        # uid_cooldown already prevents ping-pong
+                        self._last_acted[action.node] = self.stats.steps
                     self._pending.pop(action.node, None)
+                    self._pending_pro.pop(action.node, None)
                     uid = getattr(action, "uid", -1)
                     if uid >= 0:
                         self._uid_last_acted[uid] = self.stats.steps
-            for node in {a.node for a in applied}:
+            for node in {a.node for a in applied if not a.proactive}:
                 self._verify_uids[node] = frozenset(
                     p["uid"] for p in cluster.pods_on_node(node))
-        if hot.any() or applied or verified:
+        if hot.any() or pro.any() or applied or verified:
             self.history.append({
                 "step": self.stats.steps,
                 "hot_nodes": np.nonzero(hot)[0].tolist(),
+                "proactive_nodes": np.nonzero(pro)[0].tolist(),
                 "hot_slots": self.detector.hot_slots(),
                 "applied": [a.describe() for a in applied],
                 "verified": verified,
@@ -228,13 +377,80 @@ class ControlLoop:
         """Interleave rollout and control every ~k ticks (standalone driver).
 
         rollout rounds tick counts up to Cluster.CHUNK multiples, so progress
-        is tracked via the simulator clock, not the requested k.
+        is tracked via the simulator clock, not the requested k.  A rollout
+        that advances the clock by zero ticks (e.g. a cluster whose chunking
+        rounds a small remainder down to nothing) would loop forever; that
+        is an error, not a wait state.
         """
         k = k or cluster.CHUNK
         done = 0
         while done < num_ticks:
             t0 = cluster.t
             cluster.rollout(min(k, num_ticks - done))
-            done += int(cluster.t - t0)
+            progress = int(cluster.t - t0)
+            if progress <= 0:
+                raise RuntimeError(
+                    f"cluster.rollout made no progress at t={cluster.t!r} "
+                    f"({done}/{num_ticks} ticks done): refusing to spin "
+                    f"forever — check num_ticks vs the cluster's chunking"
+                )
+            done += progress
             self.step(cluster)
         return self.stats
+
+
+# ---------------------------------------------------------------------------
+# Per-scheduler control profiles (closes PR 2's "mitigation hurts RR/HUP"
+# grid cells).  The default guards were tuned against ICO placements, which
+# concentrate headroom by design; RR spreads pods uniformly and HUP packs by
+# utilization, so under those placements the same guards chase seasonal
+# troughs across near-symmetric nodes — each migration stacks load on a node
+# that is about to warm up, and p99 ends up WORSE than no mitigation on some
+# seeds.  The conservative profile demands more evidence (higher drift
+# threshold), a bigger predicted gap before moving a pod (migrate_margin),
+# longer per-pod cooldowns, and a smaller per-invocation budget; under it
+# mitigation is non-harmful for RR/HUP on the seeds where PR 2 regressed
+# while ICO/LQP keep the aggressive defaults that won them -38% p99.
+# ---------------------------------------------------------------------------
+
+SCHEDULER_PROFILES: dict[str, ControlLoopConfig] = {
+    "ICO": ControlLoopConfig(),
+    "LQP": ControlLoopConfig(),
+    # Source-relief only (no migrate / scale-out): under RR's uniform spread
+    # the per-node features are near-symmetric, so the RF's predicted
+    # destination gaps are noise and migrations chase seasonal troughs.
+    # Merely *raising* migrate_margin was not enough — replaying the PR 2
+    # grid with margin 40 still left RR 87% worse than no mitigation on
+    # seed 0; dropping destination actions entirely flipped both regressed
+    # seeds to clear wins (149->87, 133->106).
+    "RR": ControlLoopConfig(
+        uid_cooldown=8,
+        detector=DetectorConfig(drift_threshold=90.0),
+        policy=PolicyConfig(budget=8.0, cost_weight=1.5,
+                            destination_actions=False),
+    ),
+    # HUP packs by utilization, which correlates with (but under-predicts)
+    # pressure: its placements are sometimes already good, and on those
+    # seeds any extra churn is pure downside — so beyond source-only
+    # actions it gets a higher evidence bar and a smaller budget
+    # (88->88 tie on the good seed, 228->83 on the bad one).
+    "HUP": ControlLoopConfig(
+        uid_cooldown=8,
+        detector=DetectorConfig(drift_threshold=120.0),
+        policy=PolicyConfig(budget=6.0, cost_weight=2.0,
+                            destination_actions=False),
+    ),
+}
+
+
+def scheduler_loop_config(scheduler: str,
+                          proactive: bool = False) -> ControlLoopConfig:
+    """Tuned ControlLoopConfig for a scheduler (default for unknown names).
+
+    ``proactive=True`` switches on the forecast channel on top of whatever
+    profile the scheduler gets.
+    """
+    cfg = SCHEDULER_PROFILES.get(scheduler, ControlLoopConfig())
+    if proactive:
+        cfg = dataclasses.replace(cfg, proactive=True)
+    return cfg

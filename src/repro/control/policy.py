@@ -25,6 +25,13 @@ applied greedily until the per-invocation budget is exhausted.  The
 per-kind corrections come from the ControlLoop's post-action verification
 pass: action kinds whose realized reduction historically under-delivers
 their prediction are demoted in the greedy ranking.
+
+Nodes flagged *proactively* (forecast drift, no observed hotspot yet) are
+planned the same way with two twists: relief is priced at the node's
+forecast pressure rather than its (still unremarkable) current pressure,
+and candidate costs are discounted by ``proactive_cost_scale`` — an
+ahead-of-time migration drains a pod under light load instead of at the
+incident's peak, which is the whole point of acting early.
 """
 from __future__ import annotations
 
@@ -71,6 +78,19 @@ class PolicyConfig:
     min_scale_qps: float = 150.0  # don't split a service below this per replica
     migrate_margin: float = 15.0  # min predicted runqlat gap (src - dst, latency
                                   # units) before moving a pod is worth the churn
+    proactive_cost_scale: float = 0.6  # ahead-of-time actions are discounted in
+                                       # the greedy ranking: moving a pod BEFORE
+                                       # its worst window skips the drain-under-
+                                       # pressure cost a reactive move pays
+    destination_actions: bool = True   # offer migrate/scale-out at all.  Under
+                                       # near-uniform placements (RR, and HUP's
+                                       # utilization packing) the predicted
+                                       # src-dst gaps are mostly noise, and
+                                       # destination-gambling actions stack load
+                                       # on nodes about to warm up — the
+                                       # RR/HUP profiles keep only source-side
+                                       # relief (evict / throttle), which
+                                       # cannot churn
 
 
 def node_delay_curve(rho: np.ndarray) -> np.ndarray:
@@ -108,21 +128,36 @@ class MitigationPolicy:
     # -------- planning --------
 
     def plan(self, cluster, data, hot, exclude_uids=frozenset(),
-             corrections=None, attribution=None) -> list[Action]:
+             corrections=None, attribution=None, proactive=None,
+             forecast_pressure=None) -> list[Action]:
         """exclude_uids: pods recently acted on (per-pod anti-ping-pong).
         corrections: per-kind multiplicative calibration of
             ``predicted_reduction`` learned by post-action verification
             (missing kinds default to 1.0, i.e. trust the cost model).
         attribution: (N, S) per-slot drift scores from the detector; when
             given, victims are the pods whose histograms drifted.
+        proactive: optional (N,) bool mask of nodes flagged from *forecast*
+            drift only — their candidates are costed at
+            ``proactive_cost_scale`` and tagged ``proactive=True``.
+        forecast_pressure: optional (N,) forecast run-queue pressure; relief
+            on a proactive node is estimated at the pressure the forecast
+            says it WILL carry (its current pressure is unremarkable by
+            construction — the hotspot has not formed yet).
         """
         hot = np.asarray(hot, bool)
         corrections = corrections or {}
+        proactive = (np.zeros(hot.shape, bool) if proactive is None
+                     else np.asarray(proactive, bool))
         candidates: list[Action] = []
         for node in np.nonzero(hot)[0]:
+            node = int(node)
+            rho_override = None
+            if proactive[node] and forecast_pressure is not None:
+                rho_override = float(forecast_pressure[node])
             candidates.extend(
-                self._candidates(cluster, data, int(node), hot, exclude_uids,
-                                 attribution)
+                self._candidates(cluster, data, node, hot, exclude_uids,
+                                 attribution, rho_override=rho_override,
+                                 proactive=bool(proactive[node]))
             )
 
         def net_gain(a: Action) -> float:
@@ -150,7 +185,8 @@ class MitigationPolicy:
         return chosen
 
     def _candidates(self, cluster, data, node: int, hot: np.ndarray,
-                    exclude_uids=frozenset(), attribution=None) -> list[Action]:
+                    exclude_uids=frozenset(), attribution=None,
+                    rho_override=None, proactive=False) -> list[Action]:
         cfg = self.cfg
         pods = cluster.pods_on_node(node)
         eligible = [p for p in pods if p["uid"] not in exclude_uids]
@@ -158,6 +194,10 @@ class MitigationPolicy:
         online = [p for p in eligible if p["kind"] == "on"]
         cores = float(data["cpu_sum"][node])
         rho_p = self._pressure(cluster, data, node, pods)  # all pods press
+        if rho_override is not None:
+            # proactive planning: relief priced at the forecast pressure —
+            # never below the measured one (the forecast may lag reality)
+            rho_p = max(rho_p, rho_override)
         out: list[Action] = []
 
         def drift(p: dict) -> float:
@@ -199,7 +239,7 @@ class MitigationPolicy:
                     rho_p, dcores * (1.0 - cfg.throttle_frac), cores),
             ))
 
-        if online:
+        if online and cfg.destination_actions:
             # the victim is the online pod whose own histogram drifted most
             # (the one actually suffering); QPS breaks ties / is the
             # fallback when no attribution is available
@@ -251,4 +291,8 @@ class MitigationPolicy:
                         + 0.3 * max(pred[node] - pred[dst], 0.0)
                         - dst_penalty,
                     ))
+        if proactive:
+            for a in out:
+                a.cost *= cfg.proactive_cost_scale
+                a.proactive = True
         return out

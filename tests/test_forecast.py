@@ -1,0 +1,198 @@
+"""Seasonal QPS forecaster + proactive detector channel.
+
+Covers the proactive-mitigation path: forecaster convergence on a pure
+diurnal trace, the confidence/extrapolation gates, determinism across
+reset, slot clearing, the delay-curve projection, and the detector's
+forecast-CUSUM channel firing BEFORE the reactive track would.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster.simulator import TICKS_PER_DAY
+from repro.control import (
+    DetectorConfig,
+    ForecastConfig,
+    QPSForecaster,
+    StreamingDetector,
+    project_node_pressure,
+)
+from repro.core import metric
+
+
+def _diurnal(mean, t, phase=0.3):
+    w = 2 * np.pi / TICKS_PER_DAY
+    return mean * (1.0 + 0.35 * np.sin(w * t + phase)
+                   + 0.12 * np.sin(2 * w * t + 1.7 * phase))
+
+
+def _fit_day(noise=0.0, seed=0, dt=15.0, days=1.2, mean=400.0, phase=0.3):
+    f = QPSForecaster(1, 1)
+    rng = np.random.default_rng(seed)
+    ts = np.arange(30, days * TICKS_PER_DAY, dt)
+    for t in ts:
+        y = _diurnal(mean, t, phase) * (1.0 + noise * rng.normal())
+        f.update(t, np.array([[y]]), np.array([[True]]))
+    return f, float(ts[-1])
+
+
+# ---------------- forecaster ----------------
+
+def test_forecaster_converges_on_pure_diurnal_trace():
+    f, t = _fit_day(noise=0.03)
+    assert bool(f.confidence(t + 120)[0, 0])
+    for h in (60.0, 120.0, 240.0):
+        pred = float(f.forecast(t + h)[0, 0])
+        truth = _diurnal(400.0, t + h)
+        assert abs(pred - truth) / truth < 0.10
+    assert f.calibration_error() < 0.10
+
+
+def test_forecaster_tracks_predicted_movement_not_just_level():
+    """The fit must extrapolate the *change*, not parrot the last value."""
+    f, t = _fit_day(noise=0.02)
+    fit_now = float(f.forecast(t)[0, 0])
+    fit_fut = float(f.forecast(t + 240.0)[0, 0])
+    truth_delta = _diurnal(400.0, t + 240.0) - _diurnal(400.0, t)
+    assert abs(truth_delta) > 20  # the scenario actually moves
+    assert np.sign(fit_fut - fit_now) == np.sign(truth_delta)
+    assert abs((fit_fut - fit_now) - truth_delta) < 0.5 * abs(truth_delta)
+
+
+def test_forecaster_confidence_requires_history_and_low_leverage():
+    cfg = ForecastConfig()
+    f = QPSForecaster(1, 1, cfg)
+    # too few observations: never confident
+    for i in range(cfg.min_windows - 1):
+        f.update(30.0 + 15.0 * i, np.array([[400.0]]), np.array([[True]]))
+    assert not f.confidence()[0, 0]
+    # a short arc (20% of the period) keeps one-step error low but leaves
+    # the harmonic basis under-determined: the leverage gate must reject
+    # extrapolation even though the interpolation error looks fine
+    f2 = QPSForecaster(1, 1, cfg)
+    for t in np.arange(30, 620, 15.0):
+        f2.update(t, np.array([[_diurnal(400.0, t)]]), np.array([[True]]))
+    assert f2.confidence()[0, 0]              # interpolation gate passes...
+    assert not f2.confidence(620.0 + 240.0)[0, 0]  # ...extrapolation doesn't
+    # after a full period the same horizon is trusted
+    f3, t3 = _fit_day(noise=0.0)
+    assert f3.confidence(t3 + 240.0)[0, 0]
+
+
+def test_forecaster_determinism_across_reset():
+    seq = [(30.0 + 15.0 * i,
+            np.array([[300.0 + 10.0 * np.sin(i)], [500.0]]),
+            np.array([[True], [i % 2 == 0]]))
+           for i in range(20)]
+    f = QPSForecaster(2, 1)
+    first = [f.update(*args).copy() for args in seq]
+    fc1 = f.forecast(400.0)
+    f.reset()
+    second = [f.update(*args).copy() for args in seq]
+    fc2 = f.forecast(400.0)
+    for e1, e2 in zip(first, second):
+        np.testing.assert_allclose(e1, e2)
+    np.testing.assert_allclose(fc1, fc2)
+
+
+def test_forecaster_clear_slots_forgets_a_tenant():
+    f, t = _fit_day()
+    assert np.asarray(f.count)[0, 0] > 0
+    f.clear_slots([0], [0])
+    assert np.asarray(f.count)[0, 0] == 0
+    assert np.asarray(f.err)[0, 0] == 1.0
+    assert not f.confidence()[0, 0]
+    assert float(f.forecast(t)[0, 0]) == 0.0  # empty fit predicts nothing
+
+
+# ---------------- projection ----------------
+
+def _proj_data(qps, on_type=0, off_pressure=0.0):
+    n, s = qps.shape
+    return {
+        "on_type": np.full((n, s), on_type, np.int32),
+        "on_active": np.ones((n, s), bool),
+        "off_pressure": np.full((n,), off_pressure),
+        "cpu_sum": np.full((n,), 32.0),
+    }
+
+
+def test_project_node_pressure_monotone_in_qps():
+    lo = project_node_pressure(_proj_data(np.full((1, 4), 300.0)),
+                               np.full((1, 4), 300.0))
+    hi = project_node_pressure(_proj_data(np.full((1, 4), 300.0)),
+                               np.full((1, 4), 600.0))
+    assert hi[0] > lo[0] > 0
+    # offline pressure is carried through unchanged
+    off = project_node_pressure(
+        _proj_data(np.full((1, 4), 300.0), off_pressure=16.0),
+        np.full((1, 4), 300.0))
+    assert off[0] == pytest.approx(lo[0] + 16.0 / 32.0)
+
+
+# ---------------- detector forecast channel ----------------
+
+def _level_hists(levels):
+    """Deterministic (N, S, 200) histograms with given per-slot averages."""
+    levels = np.asarray(levels, float)
+    out = np.zeros((*levels.shape, metric.NUM_BINS), np.float32)
+    k = np.clip((levels / metric.BIN_WIDTH).astype(int), 0, metric.NUM_BINS - 1)
+    for idx in np.ndindex(levels.shape):
+        if levels[idx] > 0:
+            out[idx][k[idx]] = 64.0
+    return out
+
+
+def test_detector_proactive_fires_before_reactive_would():
+    """On an incident's leading edge, the forecast channel flags windows
+    before the reactive CUSUM accumulates enough observed drift."""
+    cfg = DetectorConfig(abs_threshold=1e9)  # isolate the CUSUM paths
+    with_fc = StreamingDetector(1, cfg)
+    without = StreamingDetector(1, cfg)
+    calm = _level_hists([[20.0]])
+    edge = _level_hists([[40.0]])  # observed: above baseline+slack, but the
+                                   # reactive CUSUM needs many windows to
+                                   # accumulate 60 units of drift from it
+    for _ in range(5):
+        assert not with_fc.update(calm, forecast_avg=np.array([20.0])).any()
+        assert not without.update(calm).any()
+    first_pro = first_hot = None
+    for i in range(16):
+        # forecast projects the node at 150 while observation creeps at 40
+        with_fc.update(edge, forecast_avg=np.array([150.0]))
+        without.update(edge)
+        if first_pro is None and with_fc.last_proactive.any():
+            first_pro = i
+        if first_hot is None and without.last_hot.any():
+            first_hot = i
+    assert first_pro is not None and first_hot is not None
+    assert first_pro < first_hot  # the whole point of the channel
+
+
+def test_detector_proactive_needs_observed_corroboration():
+    """A model-only prediction on a perfectly calm node must not flag."""
+    det = StreamingDetector(1, DetectorConfig(abs_threshold=1e9))
+    calm = _level_hists([[20.0]])
+    for _ in range(10):
+        det.update(calm, forecast_avg=np.array([500.0]))
+        assert not det.last_proactive.any()
+
+
+def test_detector_without_forecast_never_proactive():
+    det = StreamingDetector(1, DetectorConfig(abs_threshold=1e9))
+    hot = _level_hists([[600.0]])
+    for _ in range(8):
+        det.update(hot)
+        assert not det.last_proactive.any()
+
+
+def test_detector_reactive_flag_outranks_proactive():
+    cfg = DetectorConfig(abs_threshold=1e9, warmup=1)
+    det = StreamingDetector(1, cfg)
+    det.update(_level_hists([[20.0]]), forecast_avg=np.array([20.0]))
+    spike = _level_hists([[500.0]])
+    for _ in range(4):
+        det.update(spike, forecast_avg=np.array([900.0]))
+        # once the reactive track fires, the same window is never ALSO
+        # tagged proactive
+        assert not (det.last_hot & det.last_proactive).any()
+    assert det.last_hot.any() or det.last_proactive.any()
