@@ -11,14 +11,19 @@ Two grids:
   where the one-size-fits-all config regressed.
 
 * **Proactive axis** (``--proactive``) — ICO replayed three ways on
-  day-scale bursty traces (reactive mitigation needs nothing new; the
+  multi-day (>= 3 diurnal periods) bursty traces: no mitigation, reactive
+  mitigation, and proactive mitigation (forecast channel on).  The
   seasonal forecaster needs to observe ≈ a full diurnal period before its
-  extrapolation-leverage gate opens): no mitigation, reactive mitigation,
-  and proactive mitigation (forecast channel on).  Inter-arrival gaps are
-  sliced into ``control_window``-tick windows so the loop acts on a
-  uniform cadence inside the long gaps.  Reported per seed: the p99 of
-  each mode, proactive flag/action counts, and the forecaster's one-step
-  calibration error.
+  extrapolation-leverage gate opens, so on the old ~1.7-day traces the
+  channel was only armed for ~0.7 of a period and its steady-state value
+  was unmeasurable; at 3 days the armed fraction is ~0.7 of the whole
+  trace.  Inter-arrival gaps are sliced into ``control_window``-tick
+  windows so the loop acts on a uniform cadence inside the long gaps.
+  A fourth mode, **unified**, runs the full ClusterView/ForecastService
+  stack: ICO-F admission and proactive mitigation sharing ONE projection
+  service, so placement and runtime correction agree about where load is
+  heading.  Reported per seed: the p99 of each mode, proactive flag/action
+  counts, and the forecaster's one-step calibration error.
 
 Cost-model calibration (total predicted vs realized reduction, per-kind
 corrections) is carried exactly as before.
@@ -40,14 +45,16 @@ from repro.cluster.experiment import (
     run_experiment,
     train_default_predictor,
 )
-from repro.control import ControlLoop, scheduler_loop_config
+from repro.control import ControlLoop, ForecastService, scheduler_loop_config
 from repro.core import InterferenceQuantifier
 
 SCHEDULERS = ("ICO", "RR", "HUP", "LQP")
 
-# the proactive axis needs day-scale traces: the forecaster's leverage gate
-# only trusts extrapolation once ~a full diurnal period has been observed
-PROACTIVE_TRACE = dict(num_online=14, num_bursts=26, burst_gap=(140, 210))
+# the proactive axis needs multi-day traces: the forecaster's leverage gate
+# only trusts extrapolation once ~a full diurnal period has been observed,
+# so >= 3 days keeps the channel armed for most of the run instead of its
+# last stretch (the `days` knob sizes num_bursts to cover the span)
+PROACTIVE_TRACE = dict(num_online=14, burst_gap=(140, 210), days=3.0)
 CONTROL_WINDOW = 40
 
 
@@ -158,23 +165,34 @@ def _profile_grid(predictor, seeds, out, json_doc):
 
 
 def _proactive_axis(predictor, seeds, out, json_doc):
-    modes = ("off", "reactive", "proactive")
+    # "unified" is the full ClusterView/ForecastService stack: ICO-F
+    # admission AND proactive mitigation consuming ONE shared service, so
+    # placement and runtime correction price contention with the same
+    # projection (the other modes keep plain ICO placement)
+    modes = ("off", "reactive", "proactive", "unified")
     rows = []
     fcals = []
     for trace_seed, sim_seed in seeds:
         pods, gaps = bursty_trace(seed=trace_seed, **PROACTIVE_TRACE)
         row = {"trace_seed": trace_seed, "sim_seed": sim_seed}
         for mode in modes:
+            sched_name = "ICO-F" if mode == "unified" else "ICO"
+            sched = make_schedulers(predictor, forecast=True)[sched_name]
+            cfg = scheduler_loop_config(
+                sched_name, proactive=(mode in ("proactive", "unified")))
+            # the shared service carries the loop profile's gates/horizon —
+            # an external service's own config governs the projection
+            svc = (ForecastService(cfg.forecast, cfg.horizon)
+                   if mode == "unified" else None)
             loop = None
             if mode != "off":
                 loop = ControlLoop(
-                    InterferenceQuantifier(predictor.predict),
-                    scheduler_loop_config("ICO",
-                                          proactive=(mode == "proactive")),
+                    InterferenceQuantifier(predictor.predict), cfg,
+                    forecast_service=svc,
                 )
-            r = run_experiment(make_schedulers(predictor)["ICO"], pods, gaps,
+            r = run_experiment(sched, pods, gaps,
                                num_nodes=12, seed=sim_seed, control_loop=loop,
-                               control_window=CONTROL_WINDOW)
+                               forecast=svc, control_window=CONTROL_WINDOW)
             row[mode] = {"p99_rt": r.p99_rt, "avg_rt": r.avg_rt,
                          "mitigations": r.mitigations,
                          "proactive_mitigations": r.proactive_mitigations}
@@ -191,6 +209,7 @@ def _proactive_axis(predictor, seeds, out, json_doc):
             f"p99_off={row['off']['p99_rt']:.2f};"
             f"p99_reactive={row['reactive']['p99_rt']:.2f};"
             f"p99_proactive={row['proactive']['p99_rt']:.2f};"
+            f"p99_unified={row['unified']['p99_rt']:.2f};"
             f"pro_actions={row['proactive']['proactive_mitigations']};"
             f"win={row['proactive']['p99_rt'] <= row['reactive']['p99_rt']}",
         ))
@@ -201,6 +220,7 @@ def _proactive_axis(predictor, seeds, out, json_doc):
         f"mean_p99_off={means['off']:.2f};"
         f"mean_p99_reactive={means['reactive']:.2f};"
         f"mean_p99_proactive={means['proactive']:.2f};"
+        f"mean_p99_unified={means['unified']:.2f};"
         f"proactive_beats_reactive={means['proactive'] <= means['reactive']};"
         f"forecast_calibration={_mean(fcals) if fcals else float('nan'):.3f}",
     ))

@@ -6,6 +6,7 @@ import time
 
 import numpy as np
 
+from repro.cluster import ClusterView
 from repro.core import ICOScheduler, InterferenceQuantifier
 from repro.cluster.workloads import Pod
 
@@ -17,16 +18,16 @@ def run(fast: bool = True):
         rng = np.random.default_rng(0)
         hists = np.zeros((n, 4, 200))
         hists[:, :, 20] = rng.integers(1, 50, (n, 4))
-        data = {
-            "cpu_cur": rng.uniform(2, 20, n),
-            "cpu_sum": np.full(n, 32.0),
-            "mem_cur": rng.uniform(4, 40, n),
-            "mem_sum": np.full(n, 64.0),
-            "online_hists": hists,
-            "offline_hists": np.zeros((n, 4, 200)),
-            "features": rng.normal(0, 1, (n, 45)),
-            "online_qps_sum": rng.uniform(0, 500, n),
-        }
+        data = ClusterView(
+            cpu_cur=rng.uniform(2, 20, n),
+            cpu_sum=np.full(n, 32.0),
+            mem_cur=rng.uniform(4, 40, n),
+            mem_sum=np.full(n, 64.0),
+            online_hists=hists,
+            offline_hists=np.zeros((n, 4, 200)),
+            features=rng.normal(0, 1, (n, 45)),
+            online_qps_sum=rng.uniform(0, 500, n),
+        )
         # lightweight linear predictor keeps this a scheduler-cost benchmark
         sched = ICOScheduler(InterferenceQuantifier(lambda x: x[:, 0] * 0.1))
         pod = Pod("web_search", 200.0, True)

@@ -49,19 +49,19 @@ def main():
             pod.cpu_demand = cores
             pod.mem_demand = cores * prof.mem_per_core
             kind = f"train(cores={cores:.0f})"
-        node = ico.select_node(pod, cluster.nodes_data())
+        node = ico.select_node(pod, cluster.view())
         ok = node >= 0 and cluster.place(pod, node)
         placements.append((kind, node if ok else -1))
         cluster.rollout(10)
         print(f"   pod {i:2d} {kind:18s} -> node {node if ok else 'REJECTED'}")
 
-    data = cluster.nodes_data()
+    view = cluster.view()
     print("\n== node utilization / interference after placement ==")
     for n in range(cluster.n):
-        node_hist = data["online_hists"][n].sum(0) + data["offline_hists"][n].sum(0)
+        node_hist = view.online_hists[n].sum(0) + view.offline_hists[n].sum(0)
         avg = float(metric.avg_runqlat(jnp.asarray(node_hist)))
-        print(f"   node {n}: cpu={data['cpu_util'][n] * 100:5.1f}% "
-              f"mem={data['mem_util'][n] * 100:5.1f}% runqlat_avg={avg:7.1f}u")
+        print(f"   node {n}: cpu={view.cpu_util[n] * 100:5.1f}% "
+              f"mem={view.mem_util[n] * 100:5.1f}% runqlat_avg={avg:7.1f}u")
 
     print("\n== real framework telemetry: ServeEngine runqlat -> Eq.(1) ==")
     cfg = get_smoke_config("smollm-135m")

@@ -52,7 +52,7 @@ def main() -> None:
                       ("media_streaming", 300), ("data_caching", 1500),
                       ("web_search", 300), ("web_serving", 500)]:
         pod = make_online(name, qps)
-        node = scheduler.select_node(pod, cluster.nodes_data())
+        node = scheduler.select_node(pod, cluster.view())
         if node < 0 or not cluster.place(pod, node):
             raise RuntimeError(f"ICO could not place {name}")
         print(f"  {name:16s} qps={qps:5.0f} -> node {node}")
@@ -113,7 +113,7 @@ def proactive_main() -> None:
                       ("media_streaming", 300), ("data_caching", 1500),
                       ("web_search", 300), ("web_serving", 500)]:
         pod = make_online(name, qps)
-        node = scheduler.select_node(pod, cluster.nodes_data())
+        node = scheduler.select_node(pod, cluster.view())
         if node < 0 or not cluster.place(pod, node):
             raise RuntimeError(f"ICO could not place {name}")
         cluster.rollout(10)

@@ -1,5 +1,17 @@
-"""Simulated co-location cluster: nodes, workloads, traces, experiments."""
+"""Simulated co-location cluster: nodes, workloads, traces, experiments.
+
+The package's contract with every consumer is the **ClusterView layer**:
+``Cluster.view()`` emits one typed ``ClusterView`` snapshot per telemetry
+window — utilization and capacity arrays, Table-III features, per-slot
+runqlat histograms, per-slot tenant uids, and (when a
+``repro.control.ForecastService`` annotates it) the projected per-node
+runqlat at horizon.  Schedulers (``repro.core``), the mitigation control
+plane (``repro.control``), and the training-data generator all read the
+same dataclass instead of re-interpreting an untyped dict, so a new
+telemetry field is declared exactly once.
+"""
 from repro.cluster.simulator import Cluster, NodeSpec, S_ON, S_OFF
+from repro.cluster.view import ClusterView
 from repro.cluster.workloads import (
     Pod,
     ONLINE_PROFILES,
@@ -10,6 +22,7 @@ from repro.cluster.workloads import (
 
 __all__ = [
     "Cluster",
+    "ClusterView",
     "NodeSpec",
     "S_ON",
     "S_OFF",

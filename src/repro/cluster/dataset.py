@@ -55,7 +55,7 @@ def generate_latency_dataset(
     watched: list[tuple[int, np.ndarray]] = []  # (uid, feature_row)
 
     for step in range(num_placements):
-        data = cluster.nodes_data()
+        view = cluster.view()
         pod = _random_pod(rng)
         # random placement -> diverse (features, outcome) coverage
         candidates = np.arange(cluster.n)
@@ -72,7 +72,7 @@ def generate_latency_dataset(
             continue
 
         if pod.is_online:
-            row = np.concatenate([[pod.qps], data["features"][placed_node]])
+            row = np.concatenate([[pod.qps], view.features[placed_node]])
             watched.append((pod.uid, row, placed_node))
 
         cluster.rollout(window)

@@ -1,11 +1,16 @@
 """End-to-end scheduler comparison — reproduces Figs. 13-15.
 
-Runs identical pod-arrival traces under ICO / RR / HUP / LQP and reports
-online avg/p90/p99 response time plus cross-node CPU/MEM utilization
-standard deviation.  ``run_experiment`` optionally runs a
-``repro.control.ControlLoop`` between arrivals (mitigation on/off reruns)
-and, per Algorithm 1, queues rejected pods in a bounded retry queue that is
-re-offered on subsequent ticks instead of dropping them permanently.
+Runs identical pod-arrival traces under ICO / RR / HUP / LQP (plus the
+forecast-aware ICO-F when enabled) and reports online avg/p90/p99 response
+time plus cross-node CPU/MEM utilization standard deviation.  Every
+scheduler consumes the same typed ``repro.cluster.ClusterView`` snapshot
+per arrival tick.  ``run_experiment`` optionally runs a
+``repro.control.ControlLoop`` between arrivals (mitigation on/off reruns),
+optionally threads a shared ``repro.control.ForecastService`` through both
+the admission snapshots and the control loop (so placement and mitigation
+price contention with one projection), and, per Algorithm 1, queues
+rejected pods in a bounded retry queue that is re-offered on subsequent
+ticks instead of dropping them permanently.
 """
 from __future__ import annotations
 
@@ -14,12 +19,17 @@ from collections import deque
 
 import numpy as np
 
-from repro.core import InterferenceQuantifier, ICOScheduler, SchedulerConfig
+from repro.core import (
+    ICOFScheduler,
+    ICOScheduler,
+    InterferenceQuantifier,
+    SchedulerConfig,
+)
 from repro.core.baselines import RoundRobinScheduler, HUPScheduler, LQPScheduler
 from repro.core.predictors import RandomForestRegressor
 from repro.cluster import workloads as W
 from repro.cluster.dataset import generate_latency_dataset, _random_pod
-from repro.cluster.simulator import Cluster
+from repro.cluster.simulator import TICKS_PER_DAY, Cluster
 from repro.cluster.workloads import Pod
 
 
@@ -46,15 +56,25 @@ def train_default_predictor(seed: int = 0, num_placements: int = 250):
     return RandomForestRegressor(n_estimators=30, max_depth=10, seed=seed).fit(X, y)
 
 
-def make_schedulers(predictor, cfg: SchedulerConfig | None = None):
+def make_schedulers(predictor, cfg: SchedulerConfig | None = None,
+                    forecast: bool = False):
+    """The Figs. 13-15 scheduler set; ``forecast=True`` adds ICO-F.
+
+    ICO-F is opt-in because without a ``ForecastService`` threaded through
+    ``run_experiment`` it scores exactly like ICO — running it by default
+    would only duplicate ICO's column.
+    """
     cfg = cfg or SchedulerConfig()
     q = InterferenceQuantifier(predictor.predict)
-    return {
+    out = {
         "ICO": ICOScheduler(q, cfg),
         "RR": RoundRobinScheduler(cfg),
         "HUP": HUPScheduler(q, cfg),
         "LQP": LQPScheduler(cfg),
     }
+    if forecast:
+        out["ICO-F"] = ICOFScheduler(q, cfg)
+    return out
 
 
 def _arrival_trace(num_pods: int, seed: int):
@@ -74,6 +94,7 @@ def bursty_trace(
     seed: int = 0,
     burst_gap: tuple = (30, 60),
     job_duration: tuple = (120, 240),
+    days: float | None = None,
 ):
     """Arrival trace for the runtime-mitigation scenario: a stable fleet of
     online services, then recurring waves of heavy short offline jobs.
@@ -87,8 +108,21 @@ def bursty_trace(
     trace: the proactive benchmark uses day-scale traces (many waves spread
     over >= TICKS_PER_DAY) so the seasonal forecaster can observe enough of
     the diurnal period to pass its extrapolation-leverage gate.
+
+    ``days`` sizes the trace in diurnal periods directly: ``num_bursts`` is
+    raised (never lowered) until the expected arrival span covers
+    ``days * TICKS_PER_DAY`` ticks.  The forecaster's leverage gate opens
+    after ~0.9 of a period, so its *armed* fraction is roughly
+    ``(days - 0.9) / days`` — multi-day traces are what make the proactive
+    channel's steady-state value (and ICO-F's admission-time value)
+    measurable rather than a tail-end effect.
     """
     rng = np.random.default_rng(seed)
+    if days is not None:
+        online_span = num_online * 5.0          # mean of the (3, 8) gaps
+        per_burst = 2 * (jobs_per_burst - 1) + sum(burst_gap) / 2.0
+        num_bursts = max(num_bursts, int(round(
+            (days * TICKS_PER_DAY - online_span) / per_burst)))
     pods, gaps = [], []
     for _ in range(num_online):
         name = rng.choice(W.ONLINE_NAMES)
@@ -125,6 +159,7 @@ def run_experiment(
     settle_ticks: int = 40,
     *,
     control_loop=None,
+    forecast=None,
     control_window: int | None = None,
     retry_limit: int = 8,
     retry_attempts: int = 3,
@@ -138,15 +173,24 @@ def run_experiment(
         with the same tick cadence the scheduler sees.  Mitigation counters
         in the result are per-run deltas: a reused loop keeps cumulative
         lifetime stats, and reporting those directly would overcount.
-    control_window: with a control loop, slice each inter-arrival rollout
-        into windows of at most this many ticks and step the loop after
-        every slice.  Day-scale traces have gaps of hundreds of ticks;
-        stepping only at arrival boundaries would let whole incidents rise
-        and fade between two control iterations, and would feed the
-        detector/forecaster telemetry windows of wildly uneven length.
-        Slicing leaves the simulation stream untouched (rollout chunks the
-        same ticks identically), so results stay comparable with unsliced
-        runs of the same seed.  RT is still sampled before every loop step.
+    forecast: optional ``repro.control.ForecastService`` (or zero-arg
+        factory).  The service observes every telemetry window and
+        annotates the admission snapshots with its projection, so a
+        forecast-aware scheduler (ICO-F) admits against *projected*
+        contention.  Pass the same instance the control loop was built
+        with to share one model between placement and mitigation; a
+        warm-started service (``load_state_dict``) arrives with its trust
+        gate already open.
+    control_window: with a control loop or forecast service, slice each
+        inter-arrival rollout into windows of at most this many ticks and
+        step/observe after every slice.  Day-scale traces have gaps of
+        hundreds of ticks; stepping only at arrival boundaries would let
+        whole incidents rise and fade between two control iterations, and
+        would feed the detector/forecaster telemetry windows of wildly
+        uneven length.  Slicing leaves the simulation stream untouched
+        (rollout chunks the same ticks identically), so results stay
+        comparable with unsliced runs of the same seed.  RT is still
+        sampled before every loop step.
     retry_limit / retry_attempts: Algorithm 1 queues a pod when no node is
         feasible; rejected pods are re-offered at each subsequent arrival
         tick, up to ``retry_attempts`` times, from a queue bounded at
@@ -154,6 +198,8 @@ def run_experiment(
     """
     if control_loop is not None and not hasattr(control_loop, "step"):
         control_loop = control_loop()  # factory -> fresh per-run instance
+    if forecast is not None and not hasattr(forecast, "observe"):
+        forecast = forecast()          # factory -> fresh per-run instance
     stats0 = (0, 0, 0.0, 0.0)
     if control_loop is not None:
         s = control_loop.stats
@@ -165,16 +211,33 @@ def run_experiment(
     cpu_series, mem_series = [], []
     placed = rejected = queued_retries = 0
     retry_q: deque[tuple[Pod, int]] = deque()  # (pod, attempts so far)
+    last_view = None  # advance()'s final window view, reusable at the same t
 
-    def offer(pod: Pod, data: dict) -> bool:
-        node = scheduler.select_node(pod, data)
+    def snapshot():
+        """One ClusterView per arrival tick: every offer this tick (queued
+        re-offers + the new arrival) schedules against the same window,
+        annotated with the shared projection when a service is attached.
+        Nothing mutates the cluster between advance()'s last window view
+        and this snapshot, so a view advance() already built at this t is
+        reused instead of recomputing the feature summaries."""
+        if last_view is not None and last_view.t == cluster.t:
+            view = last_view
+        else:
+            view = cluster.view()
+        if forecast is not None:
+            forecast.observe(view)   # idempotent if advance() already did
+            forecast.annotate(view)
+        return view
+
+    def offer(pod: Pod, view) -> bool:
+        node = scheduler.select_node(pod, view)
         return node >= 0 and cluster.place(pod, node)
 
-    def drain_retries(data: dict) -> None:
+    def drain_retries(view) -> None:
         nonlocal placed, rejected, queued_retries
         for _ in range(len(retry_q)):
             qpod, failed = retry_q.popleft()  # failed = prior re-offers
-            if offer(qpod, data):
+            if offer(qpod, view):
                 placed += 1
                 queued_retries += 1
             elif failed + 1 >= retry_attempts:
@@ -191,9 +254,11 @@ def run_experiment(
         The settle phase records RT but not the util series (Figs. 14-15
         average cross-node balance over the arrival phase only).
         """
+        nonlocal last_view
+        stepped = control_loop is not None or forecast is not None
         while ticks > 0:
             w = ticks
-            if control_loop is not None and control_window is not None:
+            if stepped and control_window is not None:
                 w = min(control_window, ticks)
             t0 = cluster.t
             cluster.rollout(w)
@@ -201,8 +266,15 @@ def run_experiment(
             if record_util:
                 cpu_series.append(cluster.last["cpu_util"])
                 mem_series.append(cluster.last["mem_util"])
-            if control_loop is not None:
-                control_loop.step(cluster)
+            if stepped:
+                view = last_view = cluster.view()
+                if forecast is not None:
+                    forecast.observe(view)
+                if control_loop is not None and control_loop.step(
+                        cluster, view=view):
+                    # mitigation mutated placements: the cached view now
+                    # predates them, so the next snapshot must rebuild
+                    last_view = None
             # count the ticks actually simulated: rollout rounds up to CHUNK
             # multiples, and decrementing by the request would re-simulate
             # the rounding overshoot and diverge from an unsliced replay
@@ -211,11 +283,9 @@ def run_experiment(
 
     for pod, gap in zip(pods, gaps):
         pod = dataclasses.replace(pod)  # fresh copy per scheduler
-        # one telemetry snapshot per tick: every offer this tick (queued
-        # re-offers + the new arrival) schedules against the same window
-        data = cluster.nodes_data()
-        drain_retries(data)
-        if offer(pod, data):
+        view = snapshot()
+        drain_retries(view)
+        if offer(pod, view):
             placed += 1
         elif retry_attempts > 0 and len(retry_q) < retry_limit:
             retry_q.append((pod, 0))
@@ -223,7 +293,7 @@ def run_experiment(
             rejected += 1
         advance(gap)
 
-    drain_retries(cluster.nodes_data())
+    drain_retries(snapshot())
     rejected += len(retry_q)  # still queued at trace end: never placed
     advance(settle_ticks, record_util=False)
     rt = np.concatenate([r for r in rt_all if r.size] or [np.zeros(0)])
@@ -264,9 +334,11 @@ def compare_schedulers(
     control: bool = False,
     control_config=None,
     proactive: bool = False,
+    forecast: bool = False,
     trace: tuple | None = None,
+    control_window: int | None = None,
 ) -> dict[str, ExperimentResult]:
-    """Figs. 13-15 comparison across ICO / RR / HUP / LQP.
+    """Figs. 13-15 comparison across ICO / RR / HUP / LQP (+ ICO-F).
 
     control=True pairs EVERY scheduler with its own fresh
     ``repro.control.ControlLoop`` (built per run from the shared predictor;
@@ -275,25 +347,45 @@ def compare_schedulers(
     *tuned* profile via ``scheduler_loop_config`` — the guards that win for
     ICO hurt RR/HUP placements — unless ``control_config`` pins one shared
     config explicitly.  ``proactive=True`` additionally switches on the
-    forecast channel (ahead-of-time mitigation).  ``trace`` optionally
-    replaces the default arrival trace with a pre-built (pods, gaps) pair,
-    e.g. ``bursty_trace(...)``.
+    forecast channel (ahead-of-time mitigation).  ``forecast=True`` adds
+    the ICO-F scheduler and threads one fresh ``ForecastService`` per run
+    through BOTH the admission snapshots and (when control is on) that
+    run's control loop, so placement and mitigation consume the same
+    projection.  ``trace`` optionally replaces the default arrival trace
+    with a pre-built (pods, gaps) pair, e.g. ``bursty_trace(...)``;
+    ``control_window`` is forwarded to ``run_experiment`` (day-scale traces
+    need the gap slicing).
     """
     predictor = predictor or train_default_predictor(seed=seed)
     pods, gaps = trace if trace is not None else _arrival_trace(num_pods, seed)
     out = {}
-    for name, sched in make_schedulers(predictor).items():
-        loop = None
+    for name, sched in make_schedulers(predictor, forecast=forecast).items():
+        cfg = None
         if control:
-            from repro.control import (  # deferred: optional dep cycle
-                ControlLoop,
-                scheduler_loop_config,
-            )
+            from repro.control import scheduler_loop_config  # deferred, below
 
             cfg = (control_config if control_config is not None
                    else scheduler_loop_config(name, proactive=proactive))
-            loop = lambda cfg=cfg: ControlLoop(  # noqa: E731 - per-run factory
-                InterferenceQuantifier(predictor.predict), cfg)
+        svc = None
+        # a service only where something consumes it: ICO-F admission, or a
+        # proactive loop sharing the projection — threading one through the
+        # other runs would pay per-window forecaster updates for nothing
+        if forecast and (name == "ICO-F" or (control and proactive)):
+            from repro.control import ForecastService
+
+            # built from the loop profile so the shared instance carries the
+            # SAME gates/horizon the loop's own config asks for (an external
+            # service's config wins inside the loop)
+            svc = (ForecastService(cfg.forecast, cfg.horizon)
+                   if cfg is not None else ForecastService())
+        loop = None
+        if control:
+            from repro.control import ControlLoop  # deferred: optional dep
+
+            loop = lambda cfg=cfg, svc=svc: ControlLoop(  # noqa: E731
+                InterferenceQuantifier(predictor.predict), cfg,
+                forecast_service=svc)
         out[name] = run_experiment(sched, pods, gaps, num_nodes=num_nodes,
-                                   seed=seed, control_loop=loop)
+                                   seed=seed, control_loop=loop, forecast=svc,
+                                   control_window=control_window)
     return out

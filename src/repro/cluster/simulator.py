@@ -485,11 +485,13 @@ class Cluster:
 
     # ---------------- Data Collection Module ----------------
 
-    def nodes_data(self) -> dict:
-        """Collector output consumed by every scheduler (paper Sec. IV-A)."""
+    def view(self) -> "ClusterView":
+        """Typed collector snapshot consumed by every scheduler and the
+        control plane (paper Sec. IV-A) — see ``repro.cluster.view``."""
         if self.last is None:
             self.rollout(30)
         from repro.core.predictors.features import runqlat_summary
+        from repro.cluster.view import ClusterView
 
         s = self.last
         node_hist = s["hist_on"].sum(1) + s["hist_off"].sum(1)  # (N, 200)
@@ -503,23 +505,25 @@ class Cluster:
         off_pressure = (np.asarray(self.state["off_cores"])
                         * np.asarray(self.state["off_burst"])
                         * off_active).sum(-1)
-        return {
-            "cpu_cur": s["cpu_demand"],
-            "cpu_sum": np.asarray(self.state["cpu_sum"]),
-            "mem_cur": s["mem_used"],
-            "mem_sum": np.asarray(self.state["mem_sum"]),
-            "online_hists": s["hist_on"],
-            "offline_hists": s["hist_off"],
-            "slot_hists": slot_hists,
-            "features": features,
-            "online_qps": s["qps"],          # (N, S_ON) window-mean per slot
-            "online_qps_sum": (s["qps"] * on_active).sum(-1),
-            "on_active": on_active,
-            "on_type": np.asarray(self.state["on_type"]),
-            "off_pressure": off_pressure,    # burst-weighted offline cores
-            "cpu_util": s["cpu_util"],
-            "mem_util": s["mem_util"],
-        }
+        return ClusterView(
+            t=float(self.t),
+            cpu_cur=s["cpu_demand"],
+            cpu_sum=np.asarray(self.state["cpu_sum"]),
+            mem_cur=s["mem_used"],
+            mem_sum=np.asarray(self.state["mem_sum"]),
+            online_hists=s["hist_on"],
+            offline_hists=s["hist_off"],
+            slot_hists=slot_hists,
+            features=features,
+            online_qps=s["qps"],             # (N, S_ON) window-mean per slot
+            online_qps_sum=(s["qps"] * on_active).sum(-1),
+            on_active=on_active,
+            on_type=np.asarray(self.state["on_type"]),
+            off_pressure=off_pressure,       # burst-weighted offline cores
+            cpu_util=s["cpu_util"],
+            mem_util=s["mem_util"],
+            slot_uids=self.slot_uids(),
+        )
 
     def online_rt_samples(self) -> np.ndarray:
         """Flat response-time samples of all active online pods, last window."""

@@ -1,0 +1,96 @@
+"""ClusterView — the typed Data Collection Module snapshot (paper Sec. IV-A).
+
+One telemetry window of the whole cluster as a dataclass of arrays, built by
+``Cluster.view()`` and consumed by every scheduler (``repro.core.scheduler``
+/ ``repro.core.baselines``), the mitigation control plane
+(``repro.control.loop`` / ``repro.control.policy``), and the training-data
+generator (``repro.cluster.dataset``).  It replaces the untyped
+``nodes_data`` dict those layers used to re-interpret independently: a
+telemetry field is now declared once, named once, and available to every
+consumer — adding one is a one-place change here plus the builder in
+``Cluster.view()``.
+
+The view also carries the *forecast* fields (``forecast_runqlat`` /
+``forecast_rho`` / ``forecast_trusted``), filled in by
+``repro.control.forecast.ForecastService.annotate``: the per-node runqlat
+the shared seasonal projection expects ``horizon`` telemetry windows ahead.
+They default to ``None`` — a view without an attached forecast service is
+simply a present-time snapshot, and forecast-aware consumers (the ICO-F
+scheduler) degrade exactly to their present-time behaviour.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import metric
+
+
+@dataclasses.dataclass
+class ClusterView:
+    """Snapshot of one telemetry window across all nodes.
+
+    Array shapes use N = nodes, S_ON/S_OFF = online/offline slots per node,
+    S = S_ON + S_OFF (detector layout: online slots first), B = 200 runqlat
+    histogram bins, F = Table-III feature columns.  Partial views (fields
+    left ``None``) are legal for consumers that only read a subset — tests
+    and benchmarks construct them directly.
+    """
+
+    t: float = 0.0                                # cluster clock (ticks)
+    cpu_cur: np.ndarray | None = None             # (N,) window-mean CPU demand
+    cpu_sum: np.ndarray | None = None             # (N,) node CPU capacity
+    mem_cur: np.ndarray | None = None             # (N,) window-mean MEM used
+    mem_sum: np.ndarray | None = None             # (N,) node MEM capacity
+    online_hists: np.ndarray | None = None        # (N, S_ON, B) runqlat hists
+    offline_hists: np.ndarray | None = None       # (N, S_OFF, B)
+    slot_hists: np.ndarray | None = None          # (N, S, B) detector layout
+    features: np.ndarray | None = None            # (N, F) Table-III features
+    online_qps: np.ndarray | None = None          # (N, S_ON) window-mean QPS
+    online_qps_sum: np.ndarray | None = None      # (N,) active-slot QPS total
+    on_active: np.ndarray | None = None           # (N, S_ON) bool
+    on_type: np.ndarray | None = None             # (N, S_ON) workload type id
+    off_pressure: np.ndarray | None = None        # (N,) burst-weighted cores
+    cpu_util: np.ndarray | None = None            # (N,) window-mean CPU util
+    mem_util: np.ndarray | None = None            # (N,) window-mean MEM util
+    slot_uids: np.ndarray | None = None           # (N, S) tenant uid, -1 vacant
+    # --- filled by ForecastService.annotate (None = channel closed) ---
+    forecast_runqlat: np.ndarray | None = None    # (N,) projected avg runqlat
+    forecast_rho: np.ndarray | None = None        # (N,) projected pressure,
+                                                  #      clamped at rho_cap
+    forecast_trusted: np.ndarray | None = None    # (N,) >=1 pod passed the gate
+
+    _node_runqlat_avg: np.ndarray | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.cpu_sum)
+
+    def node_runqlat_avg(self) -> np.ndarray:
+        """(N,) average runqlat of this window's node histograms (cached)."""
+        if self._node_runqlat_avg is None:
+            hists = self.slot_hists
+            if hists is None:
+                hists = np.concatenate(
+                    [self.online_hists, self.offline_hists], axis=1)
+            self._node_runqlat_avg = np.asarray(
+                metric.avg_runqlat(np.asarray(hists).sum(1)))
+        return self._node_runqlat_avg
+
+    def forecast_drift(self) -> np.ndarray | None:
+        """(N,) projected runqlat *increase* at horizon, in latency units.
+
+        ``None`` while the forecast channel is closed (no service attached,
+        or the forecaster has not observed its cadence yet); zero on nodes
+        with no trusted pod — so forecast-aware scoring degrades exactly to
+        present-time scoring whenever the trust gate is shut.
+        """
+        if self.forecast_runqlat is None:
+            return None
+        drift = np.maximum(
+            np.asarray(self.forecast_runqlat) - self.node_runqlat_avg(), 0.0)
+        if self.forecast_trusted is not None:
+            drift = np.where(np.asarray(self.forecast_trusted, bool), drift, 0.0)
+        return drift

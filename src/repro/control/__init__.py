@@ -40,7 +40,15 @@ The loop has four stages; the first three are their own module:
       delay-curve model; the detector's forecast-CUSUM channel turns
       predicted drift into *proactive* flags, gated on forecast confidence,
       so mitigation can land before the hotspot's worst window instead of
-      after its leading edge.
+      after its leading edge.  The forecaster is owned by a
+      ``ForecastService`` — a shared projection layer over the typed
+      ``repro.cluster.ClusterView`` snapshot that BOTH the mitigation loop
+      and the admission path consume: the service observes each window
+      (idempotently, with tenant-keyed fit invalidation), projects node
+      runqlat at horizon, and annotates views so the ICO-F scheduler prices
+      projected contention with the same fit, trust gate, and ``rho_cap``
+      clamp the loop uses.  ``state_dict``/``load_state_dict`` warm-start a
+      later run from a prior run's fit.
 
   verify  (``loop``) — one telemetry window after acting, each action's
       ``predicted_reduction`` is compared against the runqlat delta the
@@ -63,6 +71,8 @@ from repro.control.actions import (
 from repro.control.detector import DetectorConfig, StreamingDetector
 from repro.control.forecast import (
     ForecastConfig,
+    ForecastService,
+    NodeProjection,
     QPSForecaster,
     project_node_pressure,
 )
@@ -84,6 +94,8 @@ __all__ = [
     "DetectorConfig",
     "StreamingDetector",
     "ForecastConfig",
+    "ForecastService",
+    "NodeProjection",
     "QPSForecaster",
     "project_node_pressure",
     "ControlLoop",

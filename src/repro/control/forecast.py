@@ -35,6 +35,15 @@ model expects at that load.  The ControlLoop feeds the detector the
 the observed window average — a bias-free drift estimate (any systematic
 model/observation offset cancels) on which the detector's forecast-CUSUM
 channel raises ``proactive`` flags before the hotspot materializes.
+
+*Service* — ``ForecastService`` packages the forecaster, the telemetry
+cadence tracking, the tenant-keyed fit invalidation, and the projection
+into one shared object over ``repro.cluster.ClusterView`` snapshots.  The
+mitigation loop and the ICO-F admission path consume the same instance, so
+runtime correction and placement price contention with a single model and
+a single trust gate — and ``state_dict``/``load_state_dict`` warm-start a
+later run from a prior run's fit instead of re-earning the leverage gate
+over a fresh diurnal period.
 """
 from __future__ import annotations
 
@@ -46,6 +55,7 @@ import numpy as np
 
 from repro.cluster import simulator as sim
 from repro.cluster.workloads import online_arrays
+from repro.control.policy import node_delay_curve
 
 NUM_FEATURES = 5  # [1, sin wt, cos wt, sin 2wt, cos 2wt]
 _OMEGA = 2.0 * np.pi / sim.TICKS_PER_DAY
@@ -204,21 +214,197 @@ class QPSForecaster:
         return float(np.asarray(self.err)[mature].mean())
 
 
-def project_node_pressure(data: dict, qps) -> np.ndarray:
+def project_node_pressure(view, qps) -> np.ndarray:
     """Burst-weighted run-queue pressure each node would carry at the given
     per-slot online QPS (offline pressure taken from the current window).
 
+    ``view`` is a ``repro.cluster.ClusterView`` (or anything exposing its
+    ``on_type`` / ``on_active`` / ``off_pressure`` / ``cpu_sum`` fields).
     Evaluating this at observed vs forecast QPS and differencing the delay
     curve gives the predicted runqlat drift, free of model bias.
     """
     arrs = online_arrays()
-    on_type = np.asarray(data["on_type"])
-    active = np.asarray(data["on_active"], bool)
+    on_type = np.asarray(view.on_type)
+    active = np.asarray(view.on_active, bool)
     qps = np.asarray(qps, np.float64)
     cpu_on = np.where(
         active,
         arrs["cpu_per_qps"][on_type] * qps + arrs["cpu_base"][on_type],
         0.0,
     )
-    pressure = cpu_on.sum(-1) + np.asarray(data["off_pressure"]) + sim.OS_BASE_CORES
-    return pressure / np.asarray(data["cpu_sum"], np.float64)
+    pressure = cpu_on.sum(-1) + np.asarray(view.off_pressure) + sim.OS_BASE_CORES
+    return pressure / np.asarray(view.cpu_sum, np.float64)
+
+
+@dataclasses.dataclass
+class NodeProjection:
+    """Per-node runqlat projection at the service horizon."""
+
+    runqlat: np.ndarray   # (N,) projected node avg runqlat: observed + delta
+    rho: np.ndarray       # (N,) forecast pressure, clamped at rho_cap
+    delta: np.ndarray     # (N,) model delta: delay(rho_fut) - delay(rho_now)
+    trusted: np.ndarray   # (N,) bool: >= 1 pod on the node passed the gate
+
+
+class ForecastService:
+    """Shared seasonal-projection service for mitigation AND admission.
+
+    One ``QPSForecaster`` plus everything around it that used to live
+    inside ``ControlLoop``: telemetry-cadence tracking (EWMA of ticks per
+    window, needed to convert the ``horizon`` from windows to ticks),
+    tenant-keyed fit invalidation (diffing consecutive ``slot_uids``
+    snapshots so a reused slot never inherits its predecessor's fit), and
+    the bias-cancelling projection ``y(t) + fit(t+h) - fit(t)`` pushed
+    through the delay-curve model.
+
+    The service is deliberately *shared*: the mitigation loop feeds its
+    projection to the detector's forecast-CUSUM channel, and the admission
+    path (``ICOFScheduler``) reads the same projection off the view via
+    ``annotate`` — so placement and runtime correction price contention
+    with one model, one trust gate, and one ``rho_cap`` clamp, and cannot
+    fight each other over where load is heading.
+
+    ``observe`` is idempotent per ``view.t`` (the experiment driver and the
+    control loop may both observe the same window) and resets itself when
+    the telemetry shape changes or the cluster clock jumps backwards (a
+    different cluster, possibly of the same size).  ``state_dict`` /
+    ``load_state_dict`` warm-start a later run from a prior run's fit —
+    useful when replaying the same workload layout, where a cold forecaster
+    would otherwise spend ~a diurnal period re-earning its leverage gate.
+    """
+
+    def __init__(self, config: ForecastConfig | None = None,
+                 horizon: float = 6.0):
+        self.cfg = config or ForecastConfig()
+        self.horizon = float(horizon)
+        self.reset()
+
+    def reset(self) -> None:
+        self.forecaster: QPSForecaster | None = None
+        self._slot_uids: np.ndarray | None = None  # last online-slot tenants
+        self._last_t: float | None = None          # clock at last observe
+        self._dt: float | None = None              # EWMA ticks per window
+
+    def clear_slots(self, nodes, slots) -> None:
+        """Forget fits for (node, online-slot) pairs whose tenant changed."""
+        if self.forecaster is not None:
+            self.forecaster.clear_slots(nodes, slots)
+
+    def observe(self, view) -> None:
+        """Fold one telemetry window's per-pod QPS into the fits.
+
+        Idempotent per ``view.t``; diffs the view's ``slot_uids`` against
+        the previous window so fits are keyed on the *tenant* (a pod
+        placed, migrated, or evicted into a slot starts from scratch).
+
+        A different cluster resets the service: a shape change is obvious,
+        and a *same-shape* swap shows up as the cluster clock jumping
+        backwards (each run restarts near zero) — without the reset a
+        shared service would keep another cluster's fits trusted, since
+        fresh uid counters also restart at 0 and defeat the tenant diff.
+        Carrying fits into a new run is therefore always explicit:
+        ``load_state_dict`` (warm start), never silent reuse.
+        """
+        qps = np.asarray(view.online_qps)
+        active = np.asarray(view.on_active, bool)
+        t = float(view.t)
+        if (self.forecaster is not None
+                and ((self.forecaster.n, self.forecaster.s) != qps.shape
+                     or (self._last_t is not None and t < self._last_t))):
+            self.reset()
+        if self.forecaster is None:
+            self.forecaster = QPSForecaster(qps.shape[0], qps.shape[1],
+                                            self.cfg)
+        if self._last_t is not None and t == self._last_t:
+            return
+        if view.slot_uids is not None:
+            uids = np.asarray(view.slot_uids)[:, : qps.shape[1]]
+            prev, self._slot_uids = self._slot_uids, uids
+            if prev is not None and prev.shape == uids.shape:
+                nodes, slots = np.nonzero(uids != prev)
+                if nodes.size:
+                    self.forecaster.clear_slots(nodes, slots)
+        self.forecaster.update(t, qps, active)
+        if self._last_t is not None and t > self._last_t:
+            dt = t - self._last_t
+            self._dt = dt if self._dt is None else 0.5 * self._dt + 0.5 * dt
+        self._last_t = t
+
+    def project(self, view) -> NodeProjection | None:
+        """Project node runqlat ``horizon`` windows ahead of ``view.t``.
+
+        Differencing the fit against itself at t vs t+h and applying the
+        move to the *observed* QPS cancels the ridge/decay shrinkage bias;
+        pods failing the confidence/leverage gate contribute their current
+        QPS (they predict "no change", not noise).  Returns ``None`` while
+        the channel is closed (no fits, or cadence not yet known).
+        """
+        if self.forecaster is None or self._dt is None:
+            return None
+        cfg = self.cfg
+        qps_now = np.asarray(view.online_qps)
+        active = np.asarray(view.on_active, bool)
+        t = float(view.t)
+        t_fut = t + self.horizon * self._dt
+        fit_now = self.forecaster.forecast(t)
+        fit_fut = self.forecaster.forecast(t_fut)
+        trusted = self.forecaster.confidence(t_fut) & active
+        qps_fut = np.where(trusted,
+                           np.maximum(qps_now + fit_fut - fit_now, 0.0),
+                           qps_now)
+        rho_fut = np.minimum(project_node_pressure(view, qps_fut),
+                             cfg.rho_cap)
+        delta = (node_delay_curve(rho_fut)
+                 - node_delay_curve(project_node_pressure(view, qps_now)))
+        return NodeProjection(
+            runqlat=view.node_runqlat_avg() + delta,
+            rho=rho_fut,
+            delta=delta,
+            trusted=trusted.any(axis=-1),
+        )
+
+    def annotate(self, view):
+        """Fill the view's forecast fields in place (no-op while closed)."""
+        proj = self.project(view)
+        if proj is not None:
+            view.forecast_runqlat = proj.runqlat
+            view.forecast_rho = proj.rho
+            view.forecast_trusted = proj.trusted
+        return view
+
+    # -------- warm start --------
+
+    def state_dict(self) -> dict:
+        """Portable snapshot of the fits for warm-starting a later run."""
+        if self.forecaster is None:
+            raise RuntimeError(
+                "no fits to save: observe() at least one window first")
+        f = self.forecaster
+        return {
+            "A": np.asarray(f.A), "b": np.asarray(f.b),
+            "err": np.asarray(f.err), "count": np.asarray(f.count),
+            "last_t": self._last_t, "dt": self._dt,
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Adopt a prior run's fits (same workload layout assumed).
+
+        The warm-started forecaster passes its confidence/leverage gates
+        immediately instead of re-earning them over ~a diurnal period;
+        ``observe`` keeps folding the new run's windows into the fit.  A
+        later ``observe`` with a different telemetry shape still resets.
+        ``_last_t`` is deliberately NOT restored: the new run's clock
+        starts near zero, and a remembered timestamp would read as the
+        clock regression ``observe`` treats as a cluster swap — loading
+        state IS the explicit consent to project across runs.
+        """
+        A = np.asarray(state["A"])
+        f = QPSForecaster(A.shape[0], A.shape[1], self.cfg)
+        f.A = jnp.asarray(A, jnp.float32)
+        f.b = jnp.asarray(state["b"], jnp.float32)
+        f.err = jnp.asarray(state["err"], jnp.float32)
+        f.count = jnp.asarray(state["count"], jnp.int32)
+        self.forecaster = f
+        self._slot_uids = None
+        self._last_t = None
+        self._dt = None if state.get("dt") is None else float(state["dt"])

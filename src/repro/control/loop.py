@@ -1,10 +1,12 @@
 """Closed-loop controller: detect hotspots, plan mitigations, act, verify.
 
-``ControlLoop.step(cluster)`` consumes the Data Collection Module output
-for the last telemetry window, feeds the per-slot runqlat histograms to the
-streaming detector (one jit'd call over all nodes and slots), and — every
-``interval``-th invocation with at least one flagged node — asks the
-mitigation policy for a budgeted action plan and applies it.
+``ControlLoop.step(cluster, view=None)`` consumes the typed
+``repro.cluster.ClusterView`` snapshot for the last telemetry window
+(building one from the cluster when the driver does not pass it in), feeds
+the per-slot runqlat histograms to the streaming detector (one jit'd call
+over all nodes and slots), and — every ``interval``-th invocation with at
+least one flagged node — asks the mitigation policy for a budgeted action
+plan and applies it.
 
 The loop is *verified*, not open-loop: every applied action records the
 source node's raw-window average runqlat, and on the next ``step`` the
@@ -14,17 +16,25 @@ realized/predicted ratio, clipped) rescales future predictions in the
 policy's greedy ranking, so action kinds that over-promise are demoted and
 the cost model self-calibrates during the run.  Realized-vs-predicted
 totals are surfaced in ``ControlStats`` and per-step ``history`` entries.
+A post-action window is only trusted when the node's pod *signature* — the
+uid set AND each pod's QPS/cores parameters — is unchanged: uid diffs
+catch arrivals and departures, the parameter check catches QPS
+renormalisation (a scale-out halves the source pod's QPS without touching
+the uid set), either of which would make the delta measure the churn
+rather than the action.
 
 The loop is optionally *proactive*: with ``proactive=True`` every step
-feeds each pod's window-mean QPS to an online seasonal forecaster
-(``repro.control.forecast``), projects node runqlat ``horizon`` windows
-ahead through the delay-curve model, and hands the projection to the
-detector's forecast-CUSUM channel.  Flags raised there carry
-``proactive=True``: the policy prices their relief at the *forecast*
-pressure and discounts their cost (the pod moves before its worst window),
-and they are exempt from post-action verification — the window they
-mitigate has not happened yet, so next window's delta would read as a
-spurious miss and poison the per-kind corrections.
+feeds the view to a ``repro.control.forecast.ForecastService`` — an
+internally-owned one by default, or a caller-supplied *shared* instance so
+the admission path (``ICOFScheduler``) and the mitigation loop price
+contention with the same projection, trust gate, and ``rho_cap`` clamp.
+The service projects node runqlat ``horizon`` windows ahead through the
+delay-curve model and the detector's forecast-CUSUM channel turns the
+projection into ``proactive=True`` flags: the policy prices their relief
+at the *forecast* pressure and discounts their cost (the pod moves before
+its worst window), and they are exempt from post-action verification — the
+window they mitigate has not happened yet, so next window's delta would
+read as a spurious miss and poison the per-kind corrections.
 
 ``run(cluster, num_ticks, k)`` interleaves the loop with
 ``Cluster.rollout`` every ``k`` ticks for standalone use; experiment
@@ -47,13 +57,8 @@ import numpy as np
 
 from repro.control.actions import Action
 from repro.control.detector import DetectorConfig, StreamingDetector
-from repro.control.forecast import (
-    ForecastConfig,
-    QPSForecaster,
-    project_node_pressure,
-)
-from repro.control.policy import MitigationPolicy, PolicyConfig, node_delay_curve
-from repro.core import metric
+from repro.control.forecast import ForecastConfig, ForecastService
+from repro.control.policy import MitigationPolicy, PolicyConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,7 +106,8 @@ class ControlStats:
 class ControlLoop:
     """Runtime interference-mitigation controller for one cluster."""
 
-    def __init__(self, quantifier, config: ControlLoopConfig | None = None):
+    def __init__(self, quantifier, config: ControlLoopConfig | None = None,
+                 forecast_service: ForecastService | None = None):
         self.cfg = config or ControlLoopConfig()
         self.policy = MitigationPolicy(quantifier, self.cfg.policy)
         self.stats = ControlStats()
@@ -109,6 +115,15 @@ class ControlLoop:
         # per-kind multiplicative calibration of predicted_reduction,
         # learned online from post-action verification (1.0 = trust model)
         self.corrections: dict[str, float] = {}
+        # a caller-supplied service is SHARED (e.g. with the ICO-F admission
+        # path) and survives reset(): its lifetime — including warm starts
+        # across runs — belongs to the owner, not to this loop.  Its OWN
+        # ForecastConfig/horizon govern the projection (that is the point of
+        # sharing: one gate for admission and mitigation), so build it from
+        # this loop's profile — ForecastService(cfg.forecast, cfg.horizon) —
+        # when the loop's forecast knobs are tuned, or cfg.forecast/
+        # cfg.horizon are silently unused
+        self._external_forecast = forecast_service
         self.reset()
 
     def reset(self) -> None:
@@ -119,20 +134,45 @@ class ControlLoop:
         another cluster are stale).  Learned ``corrections`` and cumulative
         ``stats``/``history`` survive: calibration is a property of the
         cost model, not of one cluster, and drivers that reuse a loop
-        report per-run deltas (see ``run_experiment``).
+        report per-run deltas (see ``run_experiment``).  An internally-owned
+        forecast service is rebuilt; an external one is left to its owner.
         """
         self.detector: StreamingDetector | None = None
-        self.forecaster: QPSForecaster | None = None
+        if self._external_forecast is not None:
+            self.forecast_service: ForecastService | None = \
+                self._external_forecast
+        else:
+            self.forecast_service = (
+                ForecastService(self.cfg.forecast, self.cfg.horizon)
+                if self.cfg.proactive else None)
         self._cluster_ref = lambda: None
         self._last_acted: dict[int, int] = {}      # node -> step of last action
         self._uid_last_acted: dict[int, int] = {}  # pod uid -> step (anti-ping-pong)
         self._pending: dict[int, int] = {}         # hot node -> step flagged
         self._pending_pro: dict[int, int] = {}     # forecast-flagged, disjoint
         self._to_verify: list[Action] = []         # applied last step, unchecked
-        self._verify_uids: dict[int, frozenset] = {}  # node -> pods right after acting
+        self._verify_sig: dict[int, frozenset] = {}  # node -> pod signature
         self._slot_uids: np.ndarray | None = None  # last (N, S) tenant snapshot
-        self._last_t: float | None = None          # cluster clock at last step
-        self._dt: float | None = None              # EWMA ticks per window
+
+    @property
+    def forecaster(self):
+        """The shared service's per-pod fits (None while the channel is off)."""
+        svc = self.forecast_service
+        return svc.forecaster if svc is not None else None
+
+    @staticmethod
+    def _node_signature(cluster, node: int) -> frozenset:
+        """Pod set AND per-pod load parameters of a node, for verification.
+
+        uid diffs catch arrivals/departures; the QPS/cores parameters catch
+        renormalisation — a scale-out halves the source pod's QPS without
+        changing the uid set, and a window after such a change measures the
+        renormalisation, not the verified action.
+        """
+        return frozenset(
+            (p["uid"], round(float(p.get("qps", p.get("cores", 0.0))), 6))
+            for p in cluster.pods_on_node(node)
+        )
 
     def _verify(self, cluster, window_avg: np.ndarray) -> list[dict]:
         """Compare last step's actions against the runqlat actually observed.
@@ -140,10 +180,11 @@ class ControlLoop:
         The node's realized delta is attributed across same-node actions
         proportionally to their predictions (they share one telemetry
         window), and each action's kind correction moves toward its clipped
-        realized/predicted ratio.  A node whose pod set changed between
-        acting and checking (a new arrival landed, a batch job finished) is
-        discarded: its delta measures the churn, not the action, and one
-        contaminated sample can drag a kind's correction to the floor.
+        realized/predicted ratio.  A node whose pod signature changed
+        between acting and checking (a new arrival landed, a batch job
+        finished, a pod's QPS was renormalised) is discarded: its delta
+        measures the churn, not the action, and one contaminated sample can
+        drag a kind's correction to the floor.
         """
         verified: list[dict] = []
         if not self._to_verify:
@@ -153,8 +194,8 @@ class ControlLoop:
         for a in self._to_verify:
             by_node.setdefault(a.node, []).append(a)
         for node, acts in by_node.items():
-            now = frozenset(p["uid"] for p in cluster.pods_on_node(node))
-            if now != self._verify_uids.get(node):
+            now = self._node_signature(cluster, node)
+            if now != self._verify_sig.get(node):
                 self.stats.verifications_discarded += len(acts)
                 continue
             delta = float(acts[0].pre_runqlat - window_avg[node])
@@ -181,23 +222,23 @@ class ControlLoop:
                     "correction": self.corrections[a.kind],
                 })
         self._to_verify = []
-        self._verify_uids = {}
+        self._verify_sig = {}
         return verified
 
-    def _reconcile_slot_tenants(self, cluster) -> None:
-        """Reset attribution/forecast state for slots whose tenant changed.
+    def _reconcile_slot_tenants(self, view) -> None:
+        """Reset detector attribution for slots whose tenant changed.
 
-        The detector's slot track and the forecaster's per-pod fits are
-        keyed by (node, slot), but slots are reused: the simulator places,
-        migrates, and evicts into them.  Diffing consecutive ``slot_uids``
-        snapshots keys both tracks on the *tenant* — a new arrival starts
-        from a clean slate instead of inheriting the decayed drift score
-        (and being blamed for) its predecessor's incident.
+        The detector's slot track is keyed by (node, slot), but slots are
+        reused: the simulator places, migrates, and evicts into them.
+        Diffing consecutive ``slot_uids`` snapshots keys the track on the
+        *tenant* — a new arrival starts from a clean slate instead of
+        inheriting the decayed drift score (and being blamed for) its
+        predecessor's incident.  (The forecast service does its own
+        tenant-keyed clearing inside ``observe``.)
         """
-        slot_uids = getattr(cluster, "slot_uids", None)
-        if not callable(slot_uids):
+        if view.slot_uids is None:
             return
-        uids = slot_uids()
+        uids = np.asarray(view.slot_uids)
         prev, self._slot_uids = self._slot_uids, uids
         if prev is None or prev.shape != uids.shape:
             return
@@ -205,82 +246,58 @@ class ControlLoop:
         if nodes.size == 0:
             return
         self.detector.clear_slots(nodes, slots)
-        if self.forecaster is not None:
-            online = slots < self.forecaster.s  # detector layout: online first
-            self.forecaster.clear_slots(nodes[online], slots[online])
 
-    def _forecast(self, cluster, data, window_avg):
+    def _forecast(self, view, window_avg):
         """Project each node's runqlat ``horizon`` windows ahead.
 
-        Feeds this window's per-pod QPS to the seasonal forecaster, then
-        pushes the forecast QPS through the delay-curve model and returns
-        ``(forecast_avg, forecast_rho)`` — the projected node runqlat
-        (observed average plus the *model delta* between forecast and
-        current load, so any model/observation bias cancels) and the
-        forecast run-queue pressure the policy prices relief at.  Returns
-        ``(None, None)`` while the channel is off or not yet warmed up.
+        Delegates to the shared ``ForecastService``: feeds it this window's
+        view (idempotent if the driver already did) and converts its
+        projection into the detector's forecast channel input — nodes the
+        model says will get MEANINGFULLY worse get ``window_avg + delta``,
+        the rest the no-forecast sentinel so their f_cusum cannot tip on a
+        flat projection of an already-warm node.  Returns ``(None, None)``
+        while the channel is off or not yet warmed up.
         """
-        cfg = self.cfg
-        if not cfg.proactive or "online_qps" not in data:
+        svc = self.forecast_service
+        if not self.cfg.proactive or svc is None or view.online_qps is None:
             return None, None
-        qps_now = np.asarray(data["online_qps"])
-        active = np.asarray(data["on_active"], bool)
-        if self.forecaster is None:
-            self.forecaster = QPSForecaster(
-                cluster.n, qps_now.shape[1], cfg.forecast)
-        t = float(getattr(cluster, "t", 0.0))
-        self.forecaster.update(t, qps_now, active)
-        if self._last_t is not None and t > self._last_t:
-            dt = t - self._last_t
-            self._dt = dt if self._dt is None else 0.5 * self._dt + 0.5 * dt
-        self._last_t = t
-        if self._dt is None:
+        svc.observe(view)
+        proj = svc.project(view)
+        if proj is None:
             return None, None  # need two windows to know the cadence
-        # difference the fit against ITSELF at t vs t+h, then apply the move
-        # to the observed QPS: the ridge/decay shrinkage that biases the fit
-        # a few percent low cancels out, where comparing fit(t+h) against
-        # the raw observation would read that bias as universal decline
-        t_fut = t + cfg.horizon * self._dt
-        fit_now = self.forecaster.forecast(t)
-        fit_fut = self.forecaster.forecast(t_fut)
-        # confidence gate (incl. extrapolation leverage at the forecast
-        # time): an untrusted pod predicts "no change", not noise
-        trusted = self.forecaster.confidence(t_fut) & active
-        qps_fut = np.where(trusted,
-                           np.maximum(qps_now + fit_fut - fit_now, 0.0),
-                           qps_now)
-        rho_fut = np.minimum(project_node_pressure(data, qps_fut),
-                             cfg.forecast.rho_cap)
-        delta = node_delay_curve(rho_fut) \
-            - node_delay_curve(project_node_pressure(data, qps_now))
-        # only nodes the model says will get MEANINGFULLY worse feed the
-        # proactive channel; the rest get the no-forecast sentinel so their
-        # f_cusum cannot tip on a flat projection of an already-warm node
-        forecast_avg = np.where(delta >= cfg.forecast.min_predicted_drift,
-                                window_avg + delta, -1e9)
-        return forecast_avg, rho_fut
+        forecast_avg = np.where(
+            proj.delta >= svc.cfg.min_predicted_drift,
+            window_avg + proj.delta, -1e9)
+        return forecast_avg, proj.rho
 
-    def step(self, cluster) -> list[Action]:
-        """One control iteration; returns the actions actually applied."""
+    def step(self, cluster, view=None) -> list[Action]:
+        """One control iteration; returns the actions actually applied.
+
+        ``view``: the ``ClusterView`` for the telemetry window that just
+        ended — drivers that already built one (e.g. ``run_experiment``,
+        which shares it with the forecast service) pass it in; standalone
+        callers let the loop snapshot the cluster itself.
+        """
         if (self.detector is None or self.detector.n != cluster.n
                 or self._cluster_ref() is not cluster):
             self.reset()
             self.detector = StreamingDetector(cluster.n, self.cfg.detector)
             self._cluster_ref = weakref.ref(cluster)
-        data = cluster.nodes_data()
-        slot_hists = data.get("slot_hists")
+        if view is None:
+            view = cluster.view()
+        slot_hists = view.slot_hists
         if slot_hists is None:
             slot_hists = np.concatenate(
-                [data["online_hists"], data["offline_hists"]], axis=1)
+                [view.online_hists, view.offline_hists], axis=1)
         # slot reuse since last step invalidates per-slot tracks: clear them
         # BEFORE this window's update so the new tenant's first histogram is
         # scored as an arrival jump, not summed into the predecessor's decay
-        self._reconcile_slot_tenants(cluster)
+        self._reconcile_slot_tenants(view)
         # raw last-window node average (NOT the detector's decayed estimate):
         # verification compares like with like across two adjacent windows
-        window_avg = np.asarray(metric.avg_runqlat(slot_hists.sum(1)))
+        window_avg = view.node_runqlat_avg()
         verified = self._verify(cluster, window_avg)
-        forecast_avg, forecast_rho = self._forecast(cluster, data, window_avg)
+        forecast_avg, forecast_rho = self._forecast(view, window_avg)
         hot = self.detector.update(slot_hists, forecast_avg)
         pro = self.detector.last_proactive
         if pro is None:
@@ -324,7 +341,7 @@ class ControlLoop:
                 uid for uid, step in self._uid_last_acted.items()
                 if self.stats.steps - step < self.cfg.uid_cooldown
             )
-            plan = self.policy.plan(cluster, data, actionable,
+            plan = self.policy.plan(cluster, view, actionable,
                                     exclude_uids=recently_acted,
                                     corrections=self.corrections,
                                     attribution=self.detector.attribution(),
@@ -360,8 +377,7 @@ class ControlLoop:
                     if uid >= 0:
                         self._uid_last_acted[uid] = self.stats.steps
             for node in {a.node for a in applied if not a.proactive}:
-                self._verify_uids[node] = frozenset(
-                    p["uid"] for p in cluster.pods_on_node(node))
+                self._verify_sig[node] = self._node_signature(cluster, node)
         if hot.any() or pro.any() or applied or verified:
             self.history.append({
                 "step": self.stats.steps,
@@ -413,8 +429,13 @@ class ControlLoop:
 # while ICO/LQP keep the aggressive defaults that won them -38% p99.
 # ---------------------------------------------------------------------------
 
+
 SCHEDULER_PROFILES: dict[str, ControlLoopConfig] = {
     "ICO": ControlLoopConfig(),
+    # ICO-F shares ICO's placement quality (it IS ICO until the forecast
+    # gate opens, and strictly more headroom-aware afterwards), so it keeps
+    # the aggressive profile
+    "ICO-F": ControlLoopConfig(),
     "LQP": ControlLoopConfig(),
     # Source-relief only (no migrate / scale-out): under RR's uniform spread
     # the per-node features are near-symmetric, so the RF's predicted

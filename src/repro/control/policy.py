@@ -107,30 +107,31 @@ class MitigationPolicy:
 
     # -------- helpers --------
 
-    def _pressure(self, cluster, data, node: int, pods: list[dict]) -> float:
+    def _pressure(self, cluster, view, node: int, pods: list[dict]) -> float:
         """Burst-weighted run-queue pressure of a node (peak, not average)."""
-        rho = float(data["cpu_cur"][node] / data["cpu_sum"][node])
+        rho = float(view.cpu_cur[node] / view.cpu_sum[node])
         extra = sum(p["cores"] * (p["burst"] - 1.0) for p in pods
                     if p["kind"] == "off")
-        return rho + extra / float(data["cpu_sum"][node])
+        return rho + extra / float(view.cpu_sum[node])
 
     def _relief(self, rho: float, dcores: float, cores: float) -> float:
         return float(node_delay_curve(rho) - node_delay_curve(rho - dcores / cores))
 
-    def _destinations(self, data, hot: np.ndarray, cpu_pod: float,
+    def _destinations(self, view, hot: np.ndarray, cpu_pod: float,
                       mem_pod: float, free_mask: np.ndarray) -> np.ndarray:
         """Feasible, non-hot destination nodes for a pod of given demand."""
         cfg = self.cfg
-        cpu_ok = (data["cpu_cur"] + cfg.w_d * cpu_pod) / data["cpu_sum"] <= cfg.cpu_threshold
-        mem_ok = (data["mem_cur"] + cfg.w_e * mem_pod) / data["mem_sum"] <= cfg.mem_threshold
+        cpu_ok = (view.cpu_cur + cfg.w_d * cpu_pod) / view.cpu_sum <= cfg.cpu_threshold
+        mem_ok = (view.mem_cur + cfg.w_e * mem_pod) / view.mem_sum <= cfg.mem_threshold
         return np.nonzero(cpu_ok & mem_ok & ~hot & free_mask)[0]
 
     # -------- planning --------
 
-    def plan(self, cluster, data, hot, exclude_uids=frozenset(),
+    def plan(self, cluster, view, hot, exclude_uids=frozenset(),
              corrections=None, attribution=None, proactive=None,
              forecast_pressure=None) -> list[Action]:
-        """exclude_uids: pods recently acted on (per-pod anti-ping-pong).
+        """view: the ``repro.cluster.ClusterView`` telemetry snapshot.
+        exclude_uids: pods recently acted on (per-pod anti-ping-pong).
         corrections: per-kind multiplicative calibration of
             ``predicted_reduction`` learned by post-action verification
             (missing kinds default to 1.0, i.e. trust the cost model).
@@ -155,7 +156,7 @@ class MitigationPolicy:
             if proactive[node] and forecast_pressure is not None:
                 rho_override = float(forecast_pressure[node])
             candidates.extend(
-                self._candidates(cluster, data, node, hot, exclude_uids,
+                self._candidates(cluster, view, node, hot, exclude_uids,
                                  attribution, rho_override=rho_override,
                                  proactive=bool(proactive[node]))
             )
@@ -184,7 +185,7 @@ class MitigationPolicy:
             used_uids.add(uid)
         return chosen
 
-    def _candidates(self, cluster, data, node: int, hot: np.ndarray,
+    def _candidates(self, cluster, view, node: int, hot: np.ndarray,
                     exclude_uids=frozenset(), attribution=None,
                     rho_override=None, proactive=False) -> list[Action]:
         cfg = self.cfg
@@ -192,8 +193,8 @@ class MitigationPolicy:
         eligible = [p for p in pods if p["uid"] not in exclude_uids]
         offline = [p for p in eligible if p["kind"] == "off"]
         online = [p for p in eligible if p["kind"] == "on"]
-        cores = float(data["cpu_sum"][node])
-        rho_p = self._pressure(cluster, data, node, pods)  # all pods press
+        cores = float(view.cpu_sum[node])
+        rho_p = self._pressure(cluster, view, node, pods)  # all pods press
         if rho_override is not None:
             # proactive planning: relief priced at the forecast pressure —
             # never below the measured one (the forecast may lag reality)
@@ -250,9 +251,9 @@ class MitigationPolicy:
             on_free = ~np.asarray(cluster.state["on_active"]).all(axis=1)
             # Eq.(3) prediction on every node at once: latency units
             pred = np.asarray(
-                self.q.intf_pod(victim["qps"], data["features"])
+                self.q.intf_pod(victim["qps"], view.features)
             ) * metric.OVERFLOW_EDGE
-            dsts = self._destinations(data, hot, cpu_pod, mem_pod, on_free)
+            dsts = self._destinations(view, hot, cpu_pod, mem_pod, on_free)
             if dsts.size:
                 dst = int(dsts[np.argmin(pred[dsts])])
                 # the pod rides along: only move it when the model predicts
@@ -278,8 +279,8 @@ class MitigationPolicy:
                     # against the destination's delay curve, else the
                     # estimate is systematically optimistic
                     cpu_half = prof.cpu_per_qps * half
-                    dst_cores = float(data["cpu_sum"][dst])
-                    rho_dst = float(data["cpu_cur"][dst] / dst_cores)
+                    dst_cores = float(view.cpu_sum[dst])
+                    rho_dst = float(view.cpu_cur[dst] / dst_cores)
                     dst_add = cpu_half + prof.cpu_base
                     dst_penalty = self._relief(
                         rho_dst + dst_add / dst_cores, dst_add, dst_cores)

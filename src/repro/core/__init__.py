@@ -6,7 +6,8 @@ Modules:
   interference    -- Eq. (1) node / Eq. (3) pod interference quantification
   predictors      -- 5 ML regressors for latency prediction (Table II)
   resource_model  -- QPS -> (CPU, MEM) linear predictor (Figs. 6-7)
-  scheduler       -- ICO Algorithm 1 with Eq. (4)-(6) scoring
+  scheduler       -- ICO Algorithm 1 with Eq. (4)-(6) scoring, plus the
+                     forecast-aware ICO-F variant (projected contention)
   baselines       -- RR / HUP (Eq. 7) / LQP comparison schedulers
 
 The runtime mitigation control plane (``repro.control``: detect -> rank ->
@@ -21,7 +22,7 @@ from repro.core.interference import (
     pod_interference,
 )
 from repro.core.resource_model import ResourcePredictor
-from repro.core.scheduler import ICOScheduler, SchedulerConfig
+from repro.core.scheduler import ICOFScheduler, ICOScheduler, SchedulerConfig
 from repro.core.baselines import RoundRobinScheduler, HUPScheduler, LQPScheduler
 
 _CONTROL_EXPORTS = (
@@ -47,6 +48,7 @@ __all__ = [
     "pod_interference",
     "ResourcePredictor",
     "ICOScheduler",
+    "ICOFScheduler",
     "SchedulerConfig",
     "RoundRobinScheduler",
     "HUPScheduler",

@@ -8,7 +8,8 @@ LQP — Low QPS Priority: pick the node with the lowest total online QPS.
 
 All baselines honor the same feasibility thresholds as ICO so comparisons
 isolate the scoring policy (the paper applies thresholds in Algorithm 1;
-without them HUP would immediately overload node 0).
+without them HUP would immediately overload node 0).  Every scheduler
+consumes the same typed ``repro.cluster.ClusterView`` snapshot.
 """
 from __future__ import annotations
 
@@ -17,12 +18,12 @@ import numpy as np
 from repro.core.scheduler import SchedulerConfig
 
 
-def _projected_utilization(pod, nodes_data, cfg: SchedulerConfig):
-    cpu = (np.asarray(nodes_data["cpu_cur"]) + cfg.w_d * pod.cpu_demand) / np.asarray(
-        nodes_data["cpu_sum"]
+def _projected_utilization(pod, view, cfg: SchedulerConfig):
+    cpu = (np.asarray(view.cpu_cur) + cfg.w_d * pod.cpu_demand) / np.asarray(
+        view.cpu_sum
     )
-    mem = (np.asarray(nodes_data["mem_cur"]) + cfg.w_e * pod.mem_demand) / np.asarray(
-        nodes_data["mem_sum"]
+    mem = (np.asarray(view.mem_cur) + cfg.w_e * pod.mem_demand) / np.asarray(
+        view.mem_sum
     )
     feasible = (cpu <= cfg.cpu_threshold) & (mem <= cfg.mem_threshold)
     return cpu, mem, feasible
@@ -35,9 +36,9 @@ class RoundRobinScheduler:
         self.cfg = config or SchedulerConfig()
         self._next = 0
 
-    def select_node(self, pod, nodes_data) -> int:
-        n = len(np.asarray(nodes_data["cpu_cur"]))
-        _, _, feasible = _projected_utilization(pod, nodes_data, self.cfg)
+    def select_node(self, pod, view) -> int:
+        n = len(np.asarray(view.cpu_cur))
+        _, _, feasible = _projected_utilization(pod, view, self.cfg)
         for k in range(n):
             idx = (self._next + k) % n
             if feasible[idx]:
@@ -55,10 +56,10 @@ class HUPScheduler:
         self.q = quantifier
         self.cfg = config or SchedulerConfig()
 
-    def select_node(self, pod, nodes_data) -> int:
-        cpu, mem, feasible = _projected_utilization(pod, nodes_data, self.cfg)
-        intf_h = self.q.intf_nodes(nodes_data["online_hists"], nodes_data["offline_hists"])
-        intf_p = self.q.intf_pod(pod.qps, nodes_data["features"])
+    def select_node(self, pod, view) -> int:
+        cpu, mem, feasible = _projected_utilization(pod, view, self.cfg)
+        intf_h = self.q.intf_nodes(view.online_hists, view.offline_hists)
+        intf_p = self.q.intf_pod(pod.qps, view.features)
         score = cpu * mem - intf_h - intf_p  # Eq. (7)
         score = np.where(feasible, score, -np.inf)
         best = int(np.argmax(score))
@@ -73,9 +74,9 @@ class LQPScheduler:
     def __init__(self, config: SchedulerConfig | None = None):
         self.cfg = config or SchedulerConfig()
 
-    def select_node(self, pod, nodes_data) -> int:
-        _, _, feasible = _projected_utilization(pod, nodes_data, self.cfg)
-        qps = np.asarray(nodes_data["online_qps_sum"], np.float64)
+    def select_node(self, pod, view) -> int:
+        _, _, feasible = _projected_utilization(pod, view, self.cfg)
+        qps = np.asarray(view.online_qps_sum, np.float64)
         qps = np.where(feasible, qps, np.inf)
         best = int(np.argmin(qps))
         return best if np.isfinite(qps[best]) else -1

@@ -11,6 +11,16 @@ no feasible node (caller queues the pod).
 The hot path (scoring all nodes for one pod) is a single jit'd call so the
 scheduler scales to thousands of nodes; Algorithm 1's loop becomes a masked
 argmax.
+
+``ICOFScheduler`` ("ICO-F") extends Eq. (4) with *projected* contention:
+when the ``ClusterView`` it scores carries a forecast annotation (from
+``repro.control.forecast.ForecastService``), ``intf_h`` is augmented with
+the delay-curve-projected node runqlat drift at horizon — the same
+projection, trust gate, and ``rho_cap`` clamp the mitigation loop prices
+relief with, so admission and runtime correction can never disagree about
+where contention is heading.  With the trust gate closed (no service, cold
+forecaster, or no trusted pod on a node) the drift term is absent/zero and
+ICO-F scores exactly like ICO.
 """
 from __future__ import annotations
 
@@ -20,6 +30,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.interference import INTF_NORM
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,46 +70,74 @@ class ICOScheduler:
         self.q = quantifier
         self.cfg = config or SchedulerConfig()
 
-    def select_node(self, pod, nodes_data: dict) -> int:
+    def _interference(self, pod, view):
+        """(intf_h, intf_p) for Eq. (4) — the hook ICO-F augments."""
+        intf_h = self.q.intf_nodes(view.online_hists, view.offline_hists)
+        intf_p = self.q.intf_pod(pod.qps, view.features)
+        return intf_h, intf_p
+
+    def _score(self, pod, view):
+        intf_h, intf_p = self._interference(pod, view)
+        return _score_nodes(
+            jnp.asarray(view.cpu_cur, jnp.float32),
+            jnp.asarray(view.cpu_sum, jnp.float32),
+            jnp.asarray(view.mem_cur, jnp.float32),
+            jnp.asarray(view.mem_sum, jnp.float32),
+            jnp.asarray(intf_h, jnp.float32),
+            jnp.asarray(intf_p, jnp.float32),
+            jnp.float32(pod.cpu_demand),
+            jnp.float32(pod.mem_demand),
+            self.cfg.w_d, self.cfg.w_e,
+            self.cfg.cpu_threshold, self.cfg.mem_threshold,
+        )
+
+    def select_node(self, pod, view) -> int:
         """Algorithm 1.
 
         pod: object with .qps, .cpu_demand, .mem_demand (from the Resource
              Prediction Module).
-        nodes_data: Data Collection Module output, dict of arrays keyed by:
-             cpu_cur, cpu_sum, mem_cur, mem_sum (shape (N,)),
-             online_hists (N, n_online_max, 200), offline_hists (N, n_off_max, 200),
-             features (N, F) Table-III node features (without leading QPS col).
+        view: ``repro.cluster.ClusterView`` — the Data Collection Module
+             snapshot (cpu/mem occupancy and capacity, per-slot runqlat
+             histograms, Table-III node features).
         Returns the selected node index or -1.
         """
-        intf_h = self.q.intf_nodes(nodes_data["online_hists"], nodes_data["offline_hists"])
-        intf_p = self.q.intf_pod(pod.qps, nodes_data["features"])
-        best, _ = _score_nodes(
-            jnp.asarray(nodes_data["cpu_cur"], jnp.float32),
-            jnp.asarray(nodes_data["cpu_sum"], jnp.float32),
-            jnp.asarray(nodes_data["mem_cur"], jnp.float32),
-            jnp.asarray(nodes_data["mem_sum"], jnp.float32),
-            jnp.asarray(intf_h, jnp.float32),
-            jnp.asarray(intf_p, jnp.float32),
-            jnp.float32(pod.cpu_demand),
-            jnp.float32(pod.mem_demand),
-            self.cfg.w_d, self.cfg.w_e,
-            self.cfg.cpu_threshold, self.cfg.mem_threshold,
-        )
+        best, _ = self._score(pod, view)
         return int(best)
 
-    def scores(self, pod, nodes_data: dict) -> np.ndarray:
-        intf_h = self.q.intf_nodes(nodes_data["online_hists"], nodes_data["offline_hists"])
-        intf_p = self.q.intf_pod(pod.qps, nodes_data["features"])
-        _, score = _score_nodes(
-            jnp.asarray(nodes_data["cpu_cur"], jnp.float32),
-            jnp.asarray(nodes_data["cpu_sum"], jnp.float32),
-            jnp.asarray(nodes_data["mem_cur"], jnp.float32),
-            jnp.asarray(nodes_data["mem_sum"], jnp.float32),
-            jnp.asarray(intf_h, jnp.float32),
-            jnp.asarray(intf_p, jnp.float32),
-            jnp.float32(pod.cpu_demand),
-            jnp.float32(pod.mem_demand),
-            self.cfg.w_d, self.cfg.w_e,
-            self.cfg.cpu_threshold, self.cfg.mem_threshold,
-        )
+    def scores(self, pod, view) -> np.ndarray:
+        _, score = self._score(pod, view)
         return np.asarray(score)
+
+
+class ICOFScheduler(ICOScheduler):
+    """ICO-F: Algorithm 1 scoring on *projected* contention.
+
+    ``intf_h`` gains ``w_f * forecast_drift / OVERFLOW_EDGE`` — the node
+    runqlat increase the shared seasonal projection expects ``horizon``
+    telemetry windows ahead (``ClusterView.forecast_drift``), normalized
+    exactly like every other interference term.  A node whose online fleet
+    is heading into its diurnal peak is penalized *now*, at admission,
+    instead of becoming the mitigation loop's problem six windows later.
+
+    Fallback is exact: a view without a forecast annotation (no
+    ``ForecastService`` attached, or its cadence/trust gates still closed)
+    yields ``forecast_drift() is None`` and the score reduces to ICO's
+    Eq. (4) term for term; per-node, an untrusted forecast contributes
+    zero drift.
+    """
+
+    name = "ICO-F"
+
+    def __init__(self, quantifier, config: SchedulerConfig | None = None,
+                 w_f: float = 1.0):
+        super().__init__(quantifier, config)
+        if not w_f > 0.0:
+            raise ValueError("w_f must be > 0 (use ICOScheduler to disable)")
+        self.w_f = w_f
+
+    def _interference(self, pod, view):
+        intf_h, intf_p = super()._interference(pod, view)
+        drift = view.forecast_drift()
+        if drift is not None:
+            intf_h = np.asarray(intf_h) + self.w_f * INTF_NORM * drift
+        return intf_h, intf_p

@@ -38,26 +38,29 @@ def test_placement_and_removal():
     assert not bool(np.asarray(c.state["on_active"])[0].any())
 
 
-def test_nodes_data_shapes():
+def test_view_shapes():
     c = Cluster(num_nodes=3, seed=0)
     c.rollout(20)
-    d = c.nodes_data()
-    assert d["features"].shape == (3, 45)
-    assert d["online_hists"].shape[0] == 3
-    assert d["cpu_cur"].shape == (3,)
+    v = c.view()
+    assert v.features.shape == (3, 45)
+    assert v.online_hists.shape[0] == 3
+    assert v.cpu_cur.shape == (3,)
+    assert v.num_nodes == 3
+    assert v.t == c.t
 
 
-def test_nodes_data_slot_hists_layout():
+def test_view_slot_hists_layout():
     """Per-pod attribution keys on this layout: online slots first, then
     offline slots, matching hist_on ++ hist_off concatenation."""
     from repro.cluster.simulator import S_OFF, S_ON
 
     c = Cluster(num_nodes=3, seed=0)
     c.rollout(20)
-    d = c.nodes_data()
-    assert d["slot_hists"].shape == (3, S_ON + S_OFF, 200)
-    np.testing.assert_array_equal(d["slot_hists"][:, :S_ON], d["online_hists"])
-    np.testing.assert_array_equal(d["slot_hists"][:, S_ON:], d["offline_hists"])
+    v = c.view()
+    assert v.slot_hists.shape == (3, S_ON + S_OFF, 200)
+    np.testing.assert_array_equal(v.slot_hists[:, :S_ON], v.online_hists)
+    np.testing.assert_array_equal(v.slot_hists[:, S_ON:], v.offline_hists)
+    assert v.slot_uids.shape == (3, S_ON + S_OFF)
 
 
 def test_migrate_to_full_destination_restores_state_exactly():

@@ -269,7 +269,7 @@ def test_policy_respects_budget_and_ranks_by_net_gain():
     cfg = PolicyConfig(budget=10.0, max_actions_per_node=4)
     policy = MitigationPolicy(_cheap_quantifier(), cfg)
     hot = np.array([True, False, False, False])
-    plan = policy.plan(c, c.nodes_data(), hot)
+    plan = policy.plan(c, c.view(), hot)
     assert plan  # an overloaded node yields candidates
     assert sum(a.cost for a in plan) <= cfg.budget
     net = [a.predicted_reduction - cfg.cost_weight * a.cost for a in plan]
@@ -285,7 +285,7 @@ def test_action_cost_accounting():
     assert c.place(off, 0)
     c.rollout(10)
     policy = MitigationPolicy(_cheap_quantifier(), cfg)
-    plan = policy._candidates(c, c.nodes_data(), 0, np.array([True, False]))
+    plan = policy._candidates(c, c.view(), 0, np.array([True, False]))
     evict = next(a for a in plan if isinstance(a, EvictOffline))
     assert evict.cost == pytest.approx(cfg.evict_cost_per_core * 10.0)
     resize = next(a for a in plan if isinstance(a, VerticalResize))
@@ -340,22 +340,22 @@ def test_scale_out_relief_charges_replica_base_on_destination():
         assert c.place(_offline_pod(12.0), 0)
     c.rollout(10)
     policy = MitigationPolicy(_cheap_quantifier())
-    data = c.nodes_data()
+    data = c.view()
     cands = policy._candidates(c, data, 0, np.array([True, False, False]))
     so = [a for a in cands if isinstance(a, ScaleOut)]
     assert so
     a = so[0]
     prof = ONLINE_PROFILES["web_search"]
     rho_p = policy._pressure(c, data, 0, c.pods_on_node(0))
-    cores = float(data["cpu_sum"][0])
-    pred = np.asarray(policy.q.intf_pod(900.0, data["features"])) * metric.OVERFLOW_EDGE
+    cores = float(data.cpu_sum[0])
+    pred = np.asarray(policy.q.intf_pod(900.0, data.features)) * metric.OVERFLOW_EDGE
     cpu_half = prof.cpu_per_qps * 450.0
     legacy = (policy._relief(rho_p, cpu_half, cores)
               + 0.3 * max(float(pred[0] - pred[a.dst]), 0.0))
-    dst_cores = float(data["cpu_sum"][a.dst])
+    dst_cores = float(data.cpu_sum[a.dst])
     dst_add = cpu_half + prof.cpu_base
     penalty = policy._relief(
-        float(data["cpu_cur"][a.dst]) / dst_cores + dst_add / dst_cores,
+        float(data.cpu_cur[a.dst]) / dst_cores + dst_add / dst_cores,
         dst_add, dst_cores)
     assert penalty > 0
     assert a.predicted_reduction == pytest.approx(legacy - penalty)
@@ -369,7 +369,7 @@ def test_vertical_resize_respects_min_cores_floor():
     big = _offline_pod(12.0)    # 12 * 0.5 = 6 >= 4: still throttleable
     assert c.place(small, 0) and c.place(big, 0)
     c.rollout(10)
-    cands = policy._candidates(c, c.nodes_data(), 0, np.array([True, False]))
+    cands = policy._candidates(c, c.view(), 0, np.array([True, False]))
     resized = {a.uid for a in cands if isinstance(a, VerticalResize)}
     assert big.uid in resized
     assert small.uid not in resized  # no unbounded re-throttling toward zero
@@ -389,7 +389,7 @@ def test_policy_attribution_overrides_heuristics():
         assert c.place(p, 0)
     c.rollout(10)
     policy = MitigationPolicy(_cheap_quantifier())
-    data = c.nodes_data()
+    data = c.view()
     hot = np.array([True, False])
     slots = {uid: c._pod_slots[uid][2] for uid in
              (heavy.uid, light.uid, hi_qps.uid, lo_qps.uid)}
@@ -414,7 +414,7 @@ def test_plan_corrections_demote_action_kind():
     policy = MitigationPolicy(_cheap_quantifier(),
                               PolicyConfig(budget=10.0, max_actions_per_node=4))
     hot = np.array([True, False, False, False])
-    data = c.nodes_data()
+    data = c.view()
     base = policy.plan(c, data, hot)
     assert any(isinstance(a, EvictOffline) for a in base)
     demoted = policy.plan(c, data, hot, corrections={"evict_offline": 0.0})
@@ -489,8 +489,8 @@ def test_policy_excludes_recently_acted_pods():
     c.rollout(10)
     policy = MitigationPolicy(_cheap_quantifier(), PolicyConfig())
     hot = np.array([True, False])
-    assert policy.plan(c, c.nodes_data(), hot)  # the job is actionable...
-    assert policy.plan(c, c.nodes_data(), hot,
+    assert policy.plan(c, c.view(), hot)  # the job is actionable...
+    assert policy.plan(c, c.view(), hot,
                        exclude_uids=frozenset({off.uid})) == []  # ...unless cooling down
 
 
@@ -551,6 +551,36 @@ def test_verification_learns_per_kind_corrections():
     verified = [v for h in loop.history for v in h["verified"]]
     assert len(verified) == s.actions_verified
     assert all(np.isfinite(v["realized"]) for v in verified)
+
+
+def test_verification_discards_qps_renormalised_window():
+    """Regression: pod-set diffs miss QPS renormalisation — a scale-out
+    halves the source pod's QPS without touching the uid set, so the
+    post-action window read as 'clean' while its delta measured the
+    renormalisation, not the action.  The signature check must discard it."""
+    c = _overloaded_cluster()
+    # source-relief only so the online pod stays put and the uid set of the
+    # acted node cannot change by itself
+    loop = ControlLoop(_cheap_quantifier(), ControlLoopConfig(
+        policy=PolicyConfig(destination_actions=False)))
+    applied = []
+    for _ in range(10):
+        c.rollout(10)
+        applied = loop.step(c)
+        if applied:
+            break
+    assert applied and loop._to_verify
+    node = applied[0].node
+    victim = next(p for p in c.pods_on_node(node) if p["kind"] == "on")
+    # renormalise the pod's QPS between acting and checking (what a
+    # concurrent scale-out does to its source): uid set unchanged
+    assert c.resize(victim["uid"], qps=victim["qps"] * 0.5)
+    before_discarded = loop.stats.verifications_discarded
+    before_verified = loop.stats.actions_verified
+    c.rollout(10)
+    loop.step(c)
+    assert loop.stats.verifications_discarded > before_discarded
+    assert loop.stats.actions_verified == before_verified
 
 
 def test_loop_resets_on_new_cluster_of_same_size():
@@ -620,6 +650,24 @@ def test_compare_schedulers_threads_a_loop_per_scheduler():
         assert r.mitigations >= 0
         assert np.isfinite(r.predicted_reduction)
         assert np.isfinite(r.realized_reduction)
+
+
+def test_compare_schedulers_forecast_adds_icof():
+    """forecast=True adds the ICO-F column and threads a per-run
+    ForecastService; on a short trace the trust gate never opens, so
+    ICO-F's run is identical to ICO's (exact fallback, shared pipeline)."""
+    from repro.control import scheduler_loop_config
+
+    pods, gaps = bursty_trace(num_online=5, num_bursts=1, jobs_per_burst=2,
+                              seed=1)
+    res = compare_schedulers(num_nodes=6, seed=3, predictor=_CheapPredictor(),
+                             forecast=True, trace=(pods, gaps),
+                             control_window=20)
+    assert set(res) == {"ICO", "ICO-F", "RR", "HUP", "LQP"}
+    assert res["ICO-F"].p99_rt == res["ICO"].p99_rt
+    assert res["ICO-F"].placed == res["ICO"].placed
+    # ICO-F keeps ICO's aggressive mitigation profile
+    assert scheduler_loop_config("ICO-F").policy.destination_actions
 
 
 class _StuckCluster:

@@ -8,6 +8,7 @@ forecast-CUSUM channel firing BEFORE the reactive track would.
 import numpy as np
 import pytest
 
+from repro.cluster import ClusterView
 from repro.cluster.simulator import TICKS_PER_DAY
 from repro.control import (
     DetectorConfig,
@@ -108,12 +109,12 @@ def test_forecaster_clear_slots_forgets_a_tenant():
 
 def _proj_data(qps, on_type=0, off_pressure=0.0):
     n, s = qps.shape
-    return {
-        "on_type": np.full((n, s), on_type, np.int32),
-        "on_active": np.ones((n, s), bool),
-        "off_pressure": np.full((n,), off_pressure),
-        "cpu_sum": np.full((n,), 32.0),
-    }
+    return ClusterView(
+        on_type=np.full((n, s), on_type, np.int32),
+        on_active=np.ones((n, s), bool),
+        off_pressure=np.full((n,), off_pressure),
+        cpu_sum=np.full((n,), 32.0),
+    )
 
 
 def test_project_node_pressure_monotone_in_qps():

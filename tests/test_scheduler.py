@@ -1,29 +1,35 @@
-"""Algorithm 1 (ICO) and baseline scheduler behaviour."""
+"""Algorithm 1 (ICO), the forecast-aware ICO-F variant, and baselines."""
 import numpy as np
 import pytest
 
-from repro.core import InterferenceQuantifier, ICOScheduler, SchedulerConfig
+from repro.core import (
+    ICOFScheduler,
+    ICOScheduler,
+    InterferenceQuantifier,
+    SchedulerConfig,
+)
 from repro.core.baselines import RoundRobinScheduler, HUPScheduler, LQPScheduler
+from repro.cluster import ClusterView
 from repro.cluster.workloads import Pod
 
 
-def _nodes_data(n=4, cpu_cur=None, mem_cur=None, node_runqlat=None):
+def _view(n=4, cpu_cur=None, mem_cur=None, node_runqlat=None):
     cpu_cur = np.asarray(cpu_cur if cpu_cur is not None else [4.0] * n, np.float64)
     mem_cur = np.asarray(mem_cur if mem_cur is not None else [8.0] * n, np.float64)
     hists = np.zeros((n, 2, 200))
     if node_runqlat is not None:
         for i, avg in enumerate(node_runqlat):
             hists[i, 0, int(avg // 5)] = 50
-    return {
-        "cpu_cur": cpu_cur,
-        "cpu_sum": np.full(n, 32.0),
-        "mem_cur": mem_cur,
-        "mem_sum": np.full(n, 64.0),
-        "online_hists": hists,
-        "offline_hists": np.zeros((n, 2, 200)),
-        "features": np.ones((n, 45)),
-        "online_qps_sum": np.linspace(100, 400, n),
-    }
+    return ClusterView(
+        cpu_cur=cpu_cur,
+        cpu_sum=np.full(n, 32.0),
+        mem_cur=mem_cur,
+        mem_sum=np.full(n, 64.0),
+        online_hists=hists,
+        offline_hists=np.zeros((n, 2, 200)),
+        features=np.ones((n, 45)),
+        online_qps_sum=np.linspace(100, 400, n),
+    )
 
 
 def _pod(cpu=2.0, mem=2.0, qps=100.0):
@@ -38,34 +44,34 @@ def _quantifier(per_node_pred=0.0):
 
 def test_ico_picks_lowest_interference_when_util_equal():
     sched = ICOScheduler(_quantifier())
-    data = _nodes_data(4, node_runqlat=[500, 100, 900, 300])
+    data = _view(4, node_runqlat=[500, 100, 900, 300])
     assert sched.select_node(_pod(), data) == 1
 
 
 def test_ico_respects_thresholds():
     sched = ICOScheduler(_quantifier())
     # node 0 nearly full on CPU, node 1 nearly full on MEM, node 2 free
-    data = _nodes_data(3, cpu_cur=[22.0, 4.0, 4.0], mem_cur=[8.0, 50.9, 8.0])
+    data = _view(3, cpu_cur=[22.0, 4.0, 4.0], mem_cur=[8.0, 50.9, 8.0])
     got = sched.select_node(_pod(cpu=1.0, mem=1.0), data)
     assert got == 2
 
 
 def test_ico_returns_minus_one_when_no_feasible_node():
     sched = ICOScheduler(_quantifier())
-    data = _nodes_data(2, cpu_cur=[30.0, 31.0])
+    data = _view(2, cpu_cur=[30.0, 31.0])
     assert sched.select_node(_pod(cpu=8.0), data) == -1
 
 
 def test_ico_prefers_lower_utilization():
     sched = ICOScheduler(_quantifier())
-    data = _nodes_data(3, cpu_cur=[20.0, 4.0, 12.0])
+    data = _view(3, cpu_cur=[20.0, 4.0, 12.0])
     assert sched.select_node(_pod(), data) == 1
 
 
 def test_scores_match_eq4():
     cfg = SchedulerConfig()
     sched = ICOScheduler(_quantifier(), cfg)
-    data = _nodes_data(1)
+    data = _view(1)
     pod = _pod(cpu=2.0, mem=2.0)
     s = sched.scores(pod, data)
     u_cpu = (4.0 + cfg.w_d * 2.0) / 32.0
@@ -80,13 +86,13 @@ def test_config_validates_weights():
 
 def test_hup_packs_highest_utilization():
     sched = HUPScheduler(_quantifier())
-    data = _nodes_data(3, cpu_cur=[18.0, 4.0, 10.0], mem_cur=[30.0, 8.0, 20.0])
+    data = _view(3, cpu_cur=[18.0, 4.0, 10.0], mem_cur=[30.0, 8.0, 20.0])
     assert sched.select_node(_pod(cpu=1.0, mem=1.0), data) == 0
 
 
 def test_hup_and_ico_disagree_by_design():
     q = _quantifier()
-    data = _nodes_data(2, cpu_cur=[16.0, 4.0], mem_cur=[20.0, 8.0])
+    data = _view(2, cpu_cur=[16.0, 4.0], mem_cur=[20.0, 8.0])
     pod = _pod(cpu=1.0, mem=1.0)
     assert ICOScheduler(q).select_node(pod, data) == 1
     assert HUPScheduler(q).select_node(pod, data) == 0
@@ -94,12 +100,61 @@ def test_hup_and_ico_disagree_by_design():
 
 def test_lqp_picks_lowest_qps():
     sched = LQPScheduler()
-    data = _nodes_data(4)
+    data = _view(4)
     assert sched.select_node(_pod(), data) == 0  # qps sums ascending
 
 
 def test_rr_cycles_and_skips_infeasible():
     sched = RoundRobinScheduler()
-    data = _nodes_data(3, cpu_cur=[4.0, 30.0, 4.0])  # node 1 infeasible
+    data = _view(3, cpu_cur=[4.0, 30.0, 4.0])  # node 1 infeasible
     picks = [sched.select_node(_pod(), data) for _ in range(4)]
     assert picks == [0, 2, 0, 2]
+
+
+# ---------------- ICO-F (forecast-aware admission) ----------------
+
+def test_icof_matches_ico_without_forecast_annotation():
+    """Views without a forecast annotation score term-for-term like ICO."""
+    q = _quantifier()
+    data = _view(4, node_runqlat=[500, 100, 900, 300])
+    pod = _pod()
+    assert ICOFScheduler(q).select_node(pod, data) == \
+        ICOScheduler(q).select_node(pod, data)
+    np.testing.assert_allclose(ICOFScheduler(q).scores(pod, data),
+                               ICOScheduler(q).scores(pod, data))
+
+
+def test_icof_penalizes_projected_drift():
+    """Equal present-time scores, but node 0's fleet is heading into its
+    peak: ICO still picks 0 (argmax tie), ICO-F steers to an untroubled
+    node — and back to 0 when every node fails the trust gate."""
+    q = _quantifier()
+    pod = _pod()
+    data = _view(4, node_runqlat=[100, 100, 100, 100])
+    assert ICOScheduler(q).select_node(pod, data) == 0
+    data.forecast_runqlat = data.node_runqlat_avg() + np.array(
+        [400.0, 0.0, 0.0, 0.0])
+    data.forecast_trusted = np.ones(4, bool)
+    assert ICOFScheduler(q).select_node(pod, data) != 0
+    # gate shut on every node: the projection is ignored entirely
+    data.forecast_trusted = np.zeros(4, bool)
+    assert ICOFScheduler(q).select_node(pod, data) == 0
+    np.testing.assert_allclose(ICOFScheduler(q).scores(pod, data),
+                               ICOScheduler(q).scores(pod, data))
+
+
+def test_icof_drift_is_clamped_nonnegative():
+    """A projected *improvement* must not make a node look cheaper than its
+    present-time score: drift is max(projection - observed, 0)."""
+    q = _quantifier()
+    pod = _pod()
+    data = _view(2, node_runqlat=[300, 300])
+    data.forecast_runqlat = data.node_runqlat_avg() - 200.0  # both improve
+    data.forecast_trusted = np.ones(2, bool)
+    np.testing.assert_allclose(ICOFScheduler(q).scores(pod, data),
+                               ICOScheduler(q).scores(pod, data))
+
+
+def test_icof_rejects_nonpositive_weight():
+    with pytest.raises(ValueError):
+        ICOFScheduler(_quantifier(), w_f=0.0)

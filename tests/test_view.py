@@ -1,0 +1,277 @@
+"""ClusterView layer: field-for-field parity with the legacy ``nodes_data``
+dict, view helpers, the shared ForecastService (idempotent observation,
+tenant-keyed clearing, annotation, warm start), and the ICO-F fallback
+guarantee on a full pod stream."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterView, Cluster, S_OFF, S_ON
+from repro.cluster.experiment import bursty_trace, run_experiment
+from repro.cluster.simulator import TICKS_PER_DAY
+from repro.cluster.workloads import OFFLINE_PROFILES, Pod
+from repro.control import ForecastService
+from repro.core import ICOFScheduler, ICOScheduler, InterferenceQuantifier, metric
+
+
+def _quantifier():
+    return InterferenceQuantifier(lambda X: X[:, 21])
+
+
+def _online_pod(qps=300.0, name="web_search"):
+    p = Pod(name, qps, True)
+    p.cpu_demand, p.mem_demand = 0.022 * qps + 0.8, 0.011 * qps + 2.0
+    return p
+
+
+def _offline_pod(cores=10.0, duration=500, name="graph_analytics"):
+    p = Pod(name, 0.0, False, duration=duration)
+    p.cpu_demand = cores
+    p.mem_demand = cores * OFFLINE_PROFILES[name].mem_per_core
+    return p
+
+
+def _seeded_cluster():
+    c = Cluster(num_nodes=4, seed=11)
+    for node, pod in [(0, _online_pod(420.0)), (0, _offline_pod(12.0)),
+                      (1, _online_pod(150.0, "web_serving")),
+                      (2, _offline_pod(6.0, name="in_memory_analytics"))]:
+        assert c.place(pod, node)
+    c.rollout(30)
+    return c
+
+
+# ---------------- parity with the legacy nodes_data dict ----------------
+
+def test_view_matches_legacy_nodes_data_field_for_field():
+    """The refactor must emit the exact arrays the untyped dict carried:
+    every field is recomputed here the way the seed implementation did and
+    compared against the typed snapshot."""
+    from repro.core.predictors.features import runqlat_summary
+
+    c = _seeded_cluster()
+    v = c.view()
+
+    s = c.last
+    node_hist = s["hist_on"].sum(1) + s["hist_off"].sum(1)
+    summaries = np.stack([runqlat_summary(h) for h in node_hist])
+    features = np.concatenate([s["perf"], s["hw"], summaries], axis=1)
+    on_active = np.asarray(c.state["on_active"])
+    slot_hists = np.concatenate([s["hist_on"], s["hist_off"]], axis=1)
+    off_active = np.asarray(c.state["off_active"])
+    off_pressure = (np.asarray(c.state["off_cores"])
+                    * np.asarray(c.state["off_burst"])
+                    * off_active).sum(-1)
+    legacy = {
+        "cpu_cur": s["cpu_demand"],
+        "cpu_sum": np.asarray(c.state["cpu_sum"]),
+        "mem_cur": s["mem_used"],
+        "mem_sum": np.asarray(c.state["mem_sum"]),
+        "online_hists": s["hist_on"],
+        "offline_hists": s["hist_off"],
+        "slot_hists": slot_hists,
+        "features": features,
+        "online_qps": s["qps"],
+        "online_qps_sum": (s["qps"] * on_active).sum(-1),
+        "on_active": on_active,
+        "on_type": np.asarray(c.state["on_type"]),
+        "off_pressure": off_pressure,
+        "cpu_util": s["cpu_util"],
+        "mem_util": s["mem_util"],
+    }
+    for field, expected in legacy.items():
+        np.testing.assert_array_equal(
+            np.asarray(getattr(v, field)), np.asarray(expected),
+            err_msg=field)
+    np.testing.assert_array_equal(v.slot_uids, c.slot_uids())
+    assert v.t == c.t
+    # forecast fields start unset: a bare view is a present-time snapshot
+    assert v.forecast_runqlat is None and v.forecast_drift() is None
+
+
+def test_view_node_runqlat_avg_matches_metric():
+    c = _seeded_cluster()
+    v = c.view()
+    expected = np.asarray(metric.avg_runqlat(v.slot_hists.sum(1)))
+    np.testing.assert_allclose(v.node_runqlat_avg(), expected)
+    # cached: same array object on repeat calls
+    assert v.node_runqlat_avg() is v.node_runqlat_avg()
+
+
+def test_forecast_drift_gating():
+    v = ClusterView(slot_hists=np.zeros((3, 2, metric.NUM_BINS)))
+    assert v.forecast_drift() is None
+    v.forecast_runqlat = np.array([50.0, -10.0, 30.0])
+    v.forecast_trusted = np.array([True, True, False])
+    np.testing.assert_allclose(v.forecast_drift(), [50.0, 0.0, 0.0])
+
+
+# ---------------- ForecastService ----------------
+
+def _diurnal(mean, t, phase=0.3):
+    w = 2 * np.pi / TICKS_PER_DAY
+    return mean * (1.0 + 0.35 * np.sin(w * t + phase)
+                   + 0.12 * np.sin(2 * w * t + 1.7 * phase))
+
+
+def _synthetic_view(t, qps, uid=0):
+    """One-node, one-pod view carrying just what the service consumes."""
+    hists = np.zeros((1, 1, metric.NUM_BINS), np.float32)
+    hists[0, 0, 4] = 64.0  # flat observed runqlat ~22.5 units
+    return ClusterView(
+        t=float(t),
+        online_qps=np.array([[qps]], np.float64),
+        on_active=np.ones((1, 1), bool),
+        on_type=np.zeros((1, 1), np.int32),
+        off_pressure=np.zeros(1),
+        cpu_sum=np.full(1, 32.0),
+        slot_hists=hists,
+        slot_uids=np.full((1, 1), uid, np.int64),
+    )
+
+
+def _fit_service(days=1.2, dt=15.0, mean=400.0):
+    svc = ForecastService()
+    last = None
+    for t in np.arange(30.0, days * TICKS_PER_DAY, dt):
+        last = _synthetic_view(t, _diurnal(mean, t))
+        svc.observe(last)
+    return svc, last
+
+
+def test_service_projects_after_two_windows_and_annotates():
+    svc = ForecastService()
+    v0 = _synthetic_view(30.0, 400.0)
+    svc.observe(v0)
+    assert svc.project(v0) is None            # cadence unknown
+    v1 = _synthetic_view(45.0, 402.0)
+    svc.observe(v1)
+    proj = svc.project(v1)
+    assert proj is not None
+    assert proj.runqlat.shape == (1,) and np.isfinite(proj.runqlat).all()
+    assert not proj.trusted[0]                # far from earning the gate
+    svc.annotate(v1)
+    assert v1.forecast_runqlat is not None
+    np.testing.assert_allclose(v1.forecast_drift(), [0.0])  # untrusted => 0
+
+
+def test_service_observe_is_idempotent_per_timestamp():
+    svc = ForecastService()
+    svc.observe(_synthetic_view(30.0, 400.0))
+    svc.observe(_synthetic_view(45.0, 410.0))
+    A1 = np.asarray(svc.forecaster.A).copy()
+    svc.observe(_synthetic_view(45.0, 410.0))  # driver + loop double-observe
+    np.testing.assert_array_equal(np.asarray(svc.forecaster.A), A1)
+    assert np.asarray(svc.forecaster.count)[0, 0] == 2
+
+
+def test_service_clears_fit_when_tenant_changes():
+    svc, last = _fit_service(days=0.3)
+    assert np.asarray(svc.forecaster.count)[0, 0] > 10
+    svc.observe(_synthetic_view(last.t + 15.0, 90.0, uid=7))  # new tenant
+    assert np.asarray(svc.forecaster.count)[0, 0] == 1  # only its own window
+
+
+def test_service_resets_on_same_shape_cluster_swap():
+    """Regression guard for the shared-service path: a fresh same-size
+    cluster restarts both the clock and the uid counters, so neither the
+    shape check nor the tenant diff can notice the swap — the backwards
+    clock jump must wipe the fits (warm start stays explicit via
+    load_state_dict)."""
+    svc, last = _fit_service(days=1.2)
+    assert svc.project(last) is not None and svc.project(last).trusted[0]
+    state = svc.state_dict()
+    svc.observe(_synthetic_view(30.0, 400.0))  # new run: clock restarted
+    assert np.asarray(svc.forecaster.count)[0, 0] == 1  # fits wiped
+    assert svc.project(_synthetic_view(30.0, 400.0)) is None  # cadence too
+    # the explicit path still carries fits across the swap
+    warm = ForecastService()
+    warm.load_state_dict(state)
+    warm.observe(_synthetic_view(30.0, 400.0))
+    assert np.asarray(warm.forecaster.count)[0, 0] > 100  # fits kept
+
+
+def test_service_resets_on_new_cluster_shape():
+    svc, _ = _fit_service(days=0.3)
+    v = ClusterView(
+        t=10.0,
+        online_qps=np.full((2, 3), 100.0),
+        on_active=np.ones((2, 3), bool),
+        on_type=np.zeros((2, 3), np.int32),
+        off_pressure=np.zeros(2),
+        cpu_sum=np.full(2, 32.0),
+        slot_hists=np.zeros((2, 6, metric.NUM_BINS)),
+        slot_uids=np.zeros((2, 6), np.int64),
+    )
+    svc.observe(v)
+    assert svc.forecaster.A.shape[:2] == (2, 3)
+    assert svc.project(v) is None  # cadence re-measured from scratch
+
+
+def test_service_trusts_movement_after_a_full_period():
+    """End-to-end: after > 1 diurnal period the projection is trusted and
+    tracks the true upcoming QPS movement through the delay curve."""
+    svc, last = _fit_service(days=1.2)
+    proj = svc.project(last)
+    assert proj is not None and proj.trusted[0]
+    t_fut = last.t + svc.horizon * svc._dt
+    truth_delta = _diurnal(400.0, t_fut) - _diurnal(400.0, last.t)
+    # drift direction must match the true QPS movement's effect on delay
+    assert np.sign(proj.delta[0]) == np.sign(truth_delta)
+
+
+def test_service_warm_start_round_trip():
+    svc, last = _fit_service(days=1.2)
+    state = svc.state_dict()
+    warm = ForecastService()
+    warm.load_state_dict(state)
+    # the warm service projects immediately — same fits, same cadence
+    cold_proj = svc.project(last)
+    warm_proj = warm.project(last)
+    np.testing.assert_allclose(warm_proj.runqlat, cold_proj.runqlat)
+    np.testing.assert_allclose(warm_proj.rho, cold_proj.rho)
+    assert warm_proj.trusted[0] == cold_proj.trusted[0]
+    # and keeps learning: a later observe folds in without error
+    warm.observe(_synthetic_view(last.t + 15.0, _diurnal(400.0, last.t + 15.0)))
+    assert np.asarray(warm.forecaster.count)[0, 0] \
+        == np.asarray(svc.forecaster.count)[0, 0] + 1
+
+
+def test_service_state_dict_requires_fits():
+    with pytest.raises(RuntimeError, match="no fits"):
+        ForecastService().state_dict()
+
+
+# ---------------- ICO-F fallback on a full pod stream ----------------
+
+def test_icof_stream_identical_to_ico_when_forecaster_disabled():
+    """Acceptance bar: with no ForecastService attached the ICO-F run is
+    bit-identical to ICO's for the same pod stream and seed."""
+    q = _quantifier()
+    pods, gaps = bursty_trace(num_online=6, num_bursts=2, jobs_per_burst=2,
+                              seed=1)
+    r_ico = run_experiment(ICOScheduler(q), pods, gaps, num_nodes=6, seed=3,
+                           settle_ticks=10)
+    r_icof = run_experiment(ICOFScheduler(q), pods, gaps, num_nodes=6, seed=3,
+                            settle_ticks=10)
+    assert r_icof.placed == r_ico.placed
+    assert r_icof.rejected == r_ico.rejected
+    assert r_icof.p99_rt == r_ico.p99_rt
+    assert r_icof.avg_rt == r_ico.avg_rt
+    assert r_icof.cpu_util_std == r_ico.cpu_util_std
+
+
+def test_icof_stream_with_cold_service_still_matches_ico():
+    """A service whose trust gate never opens (short trace) must not change
+    a single placement: fallback is per-node and exact."""
+    q = _quantifier()
+    pods, gaps = bursty_trace(num_online=6, num_bursts=2, jobs_per_burst=2,
+                              seed=1)
+    r_ico = run_experiment(ICOScheduler(q), pods, gaps, num_nodes=6, seed=3,
+                           settle_ticks=10)
+    r_icof = run_experiment(ICOFScheduler(q), pods, gaps, num_nodes=6, seed=3,
+                            settle_ticks=10, forecast=ForecastService(),
+                            control_window=20)
+    assert r_icof.placed == r_ico.placed
+    assert r_icof.p99_rt == r_ico.p99_rt
