@@ -32,6 +32,14 @@ corrections) is carried exactly as before.
 artifact (CI uploads it as BENCH_control.json so the perf trajectory of
 the control plane — including the reactive-vs-proactive p99 delta — is
 tracked per commit).
+
+``--trace [PATH]`` (with ``--proactive``) records the first seed's
+*unified* run through a ``repro.obs.TraceRecorder`` and saves the JSONL
+decision trace next to the JSON artifact; the bench then verifies the
+Planned -> Executed -> Verified/Discarded chain of every executed action
+straight from the trace (the ISSUE-6 acceptance bar) and reports the
+result in both the row output and the JSON document.  Query the artifact
+with ``python -m repro.obs.explain PATH``.
 """
 from __future__ import annotations
 
@@ -47,6 +55,8 @@ from repro.cluster.experiment import (
 )
 from repro.control import ControlLoop, ForecastService, scheduler_loop_config
 from repro.core import InterferenceQuantifier
+from repro.obs import Trace, TraceRecorder
+from repro.obs.explain import action_chains
 
 SCHEDULERS = ("ICO", "RR", "HUP", "LQP")
 
@@ -67,7 +77,8 @@ def _profile_grid(predictor, seeds, out, json_doc):
         name: {"off": [], "on": []} for name in SCHEDULERS
     }
     corrections: dict[str, list[float]] = {}
-    calib = {"predicted": 0.0, "realized": 0.0, "mitigations": 0}
+    calib = {"predicted": 0.0, "realized": 0.0, "mitigations": 0,
+             "mean_abs_errors": []}
     times_us: dict[str, list[float]] = {}
 
     for trace_seed, sim_seed in seeds:
@@ -92,6 +103,12 @@ def _profile_grid(predictor, seeds, out, json_doc):
                     calib["predicted"] += r.predicted_reduction
                     calib["realized"] += r.realized_reduction
                     calib["mitigations"] += r.mitigations
+                    # the canonical per-verified-action denominator lives on
+                    # ControlStats now — no more ad-hoc re-derivation here
+                    s = loop.stats
+                    if s.actions_verified:
+                        calib["mean_abs_errors"].append(
+                            s.mean_calibration_abs_error)
                     for kind, corr in loop.corrections.items():
                         corrections.setdefault(kind, []).append(corr)
 
@@ -132,13 +149,16 @@ def _profile_grid(predictor, seeds, out, json_doc):
 
     rel_err = (abs(calib["realized"] - calib["predicted"])
                / max(calib["predicted"], 1e-9))
+    mean_abs = (_mean(calib["mean_abs_errors"])
+                if calib["mean_abs_errors"] else float("nan"))
     corr_str = ";".join(
         f"corr_{k}={_mean(v):.2f}" for k, v in sorted(corrections.items()))
     out.append((
         "control.calibration",
         0.0,
         f"predicted={calib['predicted']:.1f};realized={calib['realized']:.1f};"
-        f"rel_err={rel_err:.2f};mitigations={calib['mitigations']};{corr_str}",
+        f"rel_err={rel_err:.2f};mean_abs_error={mean_abs:.1f};"
+        f"mitigations={calib['mitigations']};{corr_str}",
     ))
 
     json_doc["grid"] = {
@@ -160,11 +180,35 @@ def _profile_grid(predictor, seeds, out, json_doc):
         "predicted": calib["predicted"],
         "realized": calib["realized"],
         "rel_err": rel_err,
+        "mean_abs_error_per_action": (mean_abs if mean_abs == mean_abs
+                                      else None),
         "corrections": {k: _mean(v) for k, v in corrections.items()},
     }
 
 
-def _proactive_axis(predictor, seeds, out, json_doc):
+def _chain_check(trace: Trace) -> dict:
+    """ISSUE-6 acceptance bar, evaluated on the trace alone: every executed
+    action has a Planned event, and every non-proactive one whose next
+    window elapsed has a Verified/Discarded resolution."""
+    chains = action_chains(trace)
+    executed = [c for c in chains if c["executed"] is not None]
+    last_w = trace.last_window()
+    missing_planned = [c["action_id"] for c in executed
+                       if c["planned"] is None]
+    missing_verified = [
+        c["action_id"] for c in executed
+        if not c["executed"].proactive and c["executed"].window < last_w
+        and c["verified"] is None
+    ]
+    return {
+        "executed": len(executed),
+        "missing_planned": missing_planned,
+        "missing_verified": missing_verified,
+        "chain_ok": not missing_planned and not missing_verified,
+    }
+
+
+def _proactive_axis(predictor, seeds, out, json_doc, trace_path=None):
     # "unified" is the full ClusterView/ForecastService stack: ICO-F
     # admission AND proactive mitigation consuming ONE shared service, so
     # placement and runtime correction price contention with the same
@@ -172,7 +216,7 @@ def _proactive_axis(predictor, seeds, out, json_doc):
     modes = ("off", "reactive", "proactive", "unified")
     rows = []
     fcals = []
-    for trace_seed, sim_seed in seeds:
+    for seed_idx, (trace_seed, sim_seed) in enumerate(seeds):
         pods, gaps = bursty_trace(seed=trace_seed, **PROACTIVE_TRACE)
         row = {"trace_seed": trace_seed, "sim_seed": sim_seed}
         for mode in modes:
@@ -190,9 +234,26 @@ def _proactive_axis(predictor, seeds, out, json_doc):
                     InterferenceQuantifier(predictor.predict), cfg,
                     forecast_service=svc,
                 )
+            # trace the first seed's unified run (the full stack: admission
+            # breakdowns, hotspot channels, action chains, trust-gate flips)
+            rec = (TraceRecorder() if trace_path and seed_idx == 0
+                   and mode == "unified" else None)
             r = run_experiment(sched, pods, gaps,
                                num_nodes=12, seed=sim_seed, control_loop=loop,
-                               forecast=svc, control_window=CONTROL_WINDOW)
+                               forecast=svc, control_window=CONTROL_WINDOW,
+                               recorder=rec)
+            if rec is not None:
+                n_events = rec.save(trace_path)
+                check = _chain_check(Trace(rec.events))
+                out.append((
+                    "control.trace",
+                    0.0,
+                    f"path={trace_path};events={n_events};"
+                    f"executed={check['executed']};"
+                    f"chain_ok={check['chain_ok']}",
+                ))
+                json_doc["trace"] = {"path": trace_path,
+                                     "events": n_events, **check}
             row[mode] = {"p99_rt": r.p99_rt, "avg_rt": r.avg_rt,
                          "mitigations": r.mitigations,
                          "proactive_mitigations": r.proactive_mitigations}
@@ -234,7 +295,7 @@ def _proactive_axis(predictor, seeds, out, json_doc):
 
 
 def run(fast: bool = True, json_path: str | None = None,
-        proactive: bool = False):
+        proactive: bool = False, trace_path: str | None = None):
     num_placements = 80 if fast else 250
     # (trace_seed, sim_seed) pairs: the acceptance bar is ICO+control
     # beating plain ICO on p99 at >= 2 independent seeds
@@ -246,7 +307,8 @@ def run(fast: bool = True, json_path: str | None = None,
     json_doc: dict = {"seeds": seeds, "fast": fast}
     _profile_grid(predictor, seeds, out, json_doc)
     if proactive:
-        _proactive_axis(predictor, seeds, out, json_doc)
+        _proactive_axis(predictor, seeds, out, json_doc,
+                        trace_path=trace_path)
 
     if json_path:
         with open(json_path, "w") as f:
@@ -254,12 +316,20 @@ def run(fast: bool = True, json_path: str | None = None,
     return out
 
 
+def _flag_value(argv, flag, default):
+    if flag not in argv:
+        return None
+    i = argv.index(flag)
+    if i + 1 < len(argv) and not argv[i + 1].startswith("--"):
+        return argv[i + 1]
+    return default
+
+
 if __name__ == "__main__":
     fast = "--full" not in sys.argv
-    json_path = None
-    if "--json" in sys.argv:
-        i = sys.argv.index("--json")
-        json_path = sys.argv[i + 1] if i + 1 < len(sys.argv) else "BENCH_control.json"
+    json_path = _flag_value(sys.argv, "--json", "BENCH_control.json")
+    trace_path = _flag_value(sys.argv, "--trace", "BENCH_control_trace.jsonl")
     for row in run(fast=fast, json_path=json_path,
-                   proactive="--proactive" in sys.argv):
+                   proactive="--proactive" in sys.argv,
+                   trace_path=trace_path):
         print(",".join(map(str, row)))

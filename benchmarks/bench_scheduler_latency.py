@@ -1,7 +1,17 @@
 """Scheduler decision latency at scale: Algorithm 1 must stay cheap as the
-node count grows (it is on every pod-submission critical path)."""
+node count grows (it is on every pod-submission critical path).
+
+``--timers`` additionally runs a short proactive control loop against a
+live simulator and reports the wall-clock split across control-plane
+phases (rollout / detect / forecast / plan / verify) from the loop's
+``PhaseTimers`` — the baseline ROADMAP item 2's 5k-node latency gate
+measures against.  Phase means include JAX dispatch; the first window
+carries jit compilation, which is why the split is reported over ~30
+windows rather than one.
+"""
 from __future__ import annotations
 
+import sys
 import time
 
 import numpy as np
@@ -11,7 +21,7 @@ from repro.core import ICOScheduler, InterferenceQuantifier
 from repro.cluster.workloads import Pod
 
 
-def run(fast: bool = True):
+def run(fast: bool = True, timers: bool = False):
     out = []
     sizes = (100, 1000) if fast else (100, 1000, 10000)
     for n in sizes:
@@ -39,9 +49,54 @@ def run(fast: bool = True):
             sel = sched.select_node(pod, data)
         us = (time.time() - t0) / reps * 1e6
         out.append((f"scheduler_latency.n{n}", us, f"selected={sel}"))
+    if timers:
+        _phase_timers(out)
     return out
 
 
+def _phase_timers(out, windows: int = 30, window_ticks: int = 40):
+    """Per-phase wall-clock split of a live proactive control loop.
+
+    A small real cluster (8 nodes, a handful of online pods) driven for
+    ``windows`` telemetry windows: the loop's own ``PhaseTimers`` wrap the
+    jit'd detector/forecaster/policy calls and the rollout, so the split
+    is exactly what a traced experiment's PhaseTimings events carry.
+    """
+    from repro.cluster.simulator import Cluster
+    from repro.cluster.workloads import ONLINE_PROFILES
+    from repro.control import ControlLoop, scheduler_loop_config
+
+    q = InterferenceQuantifier(lambda x: np.asarray(x)[:, 0] * 0.1)
+    sched = ICOScheduler(q)
+    cluster = Cluster(num_nodes=8, seed=5)
+    cluster.rollout(30)
+    rng = np.random.default_rng(5)
+    for _ in range(10):
+        name = rng.choice(list(ONLINE_PROFILES))
+        prof = ONLINE_PROFILES[name]
+        qps = float(rng.uniform(150, 450))
+        pod = Pod(name, qps, True)
+        pod.cpu_demand = prof.cpu_per_qps * qps + prof.cpu_base
+        pod.mem_demand = prof.mem_per_qps * qps + prof.mem_base
+        node = sched.select_node(pod, cluster.view())
+        if node >= 0:
+            cluster.place(pod, node)
+        cluster.rollout(10)
+    loop = ControlLoop(q, scheduler_loop_config("ICO", proactive=True))
+    for _ in range(windows):
+        with loop.timers.phase("rollout"):
+            cluster.rollout(window_ticks)
+        loop.step(cluster)
+    for phase, s in sorted(loop.timers.summary().items()):
+        out.append((
+            f"scheduler_latency.phase.{phase}",
+            s["mean_ms"] * 1e3,  # us, like every other row
+            f"calls={s['calls']};total_s={s['total_s']:.3f};"
+            f"mean_ms={s['mean_ms']:.2f}",
+        ))
+
+
 if __name__ == "__main__":
-    for row in run():
+    for row in run(fast="--full" not in sys.argv,
+                   timers="--timers" in sys.argv):
         print(",".join(map(str, row)))

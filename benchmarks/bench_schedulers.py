@@ -9,6 +9,11 @@ a service bit-identical to ICO (exact fallback).  Day-scale traces are
 mandatory — the forecaster's extrapolation-leverage gate only opens after
 ~0.9 of a diurnal period, so short traces would compare two identical
 schedulers.
+
+``--trace [PATH]`` (with ``--forecast``) records the first seed's ICO-F
+run through a ``repro.obs.TraceRecorder`` and saves the JSONL admission
+trace — every placement with its per-node Eq. (4)-(6) + forecast-term
+breakdown, queryable via ``python -m repro.obs.explain PATH --pod UID``.
 """
 from __future__ import annotations
 
@@ -35,7 +40,8 @@ def _mean(xs):
     return sum(xs) / len(xs)
 
 
-def run(fast: bool = True, forecast: bool = False):
+def run(fast: bool = True, forecast: bool = False,
+        trace_path: str | None = None):
     n_pods = 40 if fast else 90
     t0 = time.time()
     res = compare_schedulers(num_pods=n_pods, num_nodes=12, seed=7)
@@ -52,11 +58,11 @@ def run(fast: bool = True, forecast: bool = False):
             f"placed={r.placed};vs_hup_avg={rel:+.1f}%",
         ))
     if forecast:
-        _forecast_axis(out, fast=fast)
+        _forecast_axis(out, fast=fast, trace_path=trace_path)
     return out
 
 
-def _forecast_axis(out, fast: bool = True):
+def _forecast_axis(out, fast: bool = True, trace_path: str | None = None):
     from repro.control import ForecastService
 
     predictor = train_default_predictor(
@@ -69,10 +75,22 @@ def _forecast_axis(out, fast: bool = True):
         r_ico = run_experiment(scheds["ICO"], pods, gaps, num_nodes=12,
                                seed=sim_seed)
         svc = ForecastService()
+        rec = None
+        if trace_path and i == 0:
+            from repro.obs import TraceRecorder
+            rec = TraceRecorder()
         r_icof = run_experiment(scheds["ICO-F"], pods, gaps, num_nodes=12,
                                 seed=sim_seed, forecast=svc,
-                                control_window=CONTROL_WINDOW)
+                                control_window=CONTROL_WINDOW, recorder=rec)
         us = (time.time() - t0) * 1e6
+        if rec is not None:
+            n_events = rec.save(trace_path)
+            out.append((
+                "schedulers.forecast.trace",
+                0.0,
+                f"path={trace_path};events={n_events};"
+                f"admissions={len(rec.query('admission'))}",
+            ))
         row = {"ico": r_ico, "icof": r_icof}
         if i == 0:
             # exact-fallback bar: ICO-F without a service IS ICO
@@ -102,6 +120,14 @@ def _forecast_axis(out, fast: bool = True):
 
 
 if __name__ == "__main__":
+    trace_path = None
+    if "--trace" in sys.argv:
+        i = sys.argv.index("--trace")
+        trace_path = (sys.argv[i + 1]
+                      if i + 1 < len(sys.argv)
+                      and not sys.argv[i + 1].startswith("--")
+                      else "BENCH_schedulers_trace.jsonl")
     for row in run(fast="--full" not in sys.argv,
-                   forecast="--forecast" in sys.argv):
+                   forecast="--forecast" in sys.argv,
+                   trace_path=trace_path):
         print(",".join(map(str, row)))

@@ -8,6 +8,10 @@ we then inject a real ServeEngine + real train steps for one node to show
 the runqlat metric flowing end-to-end from framework telemetry into
 Eq. (1)/(3).
 
+Every admission runs with a ``TraceRecorder`` attached, so after the
+stream is placed the demo replays one decision from the trace: the full
+per-node Eq. (4)-(6) breakdown behind "why did this pod land there".
+
 Run: PYTHONPATH=src python examples/colocation_sim.py
 """
 import numpy as np
@@ -20,6 +24,8 @@ from repro.cluster.workloads import Pod, ONLINE_PROFILES, OFFLINE_PROFILES
 from repro.configs import get_smoke_config
 from repro.core import metric
 from repro.models import model as M
+from repro.obs import Trace, TraceRecorder
+from repro.obs.explain import explain_pod
 from repro.serve import ServeEngine
 
 
@@ -27,9 +33,12 @@ def main():
     print("== training the Eq.(3) predictor on simulated telemetry ==")
     predictor = train_default_predictor(seed=3, num_placements=120)
     ico = make_schedulers(predictor)["ICO"]
+    rec = TraceRecorder()
+    ico.recorder = rec
 
     cluster = Cluster(num_nodes=6, seed=3)
     cluster.rollout(30)
+    rec.begin_window(cluster.t)
 
     print("== submitting a mixed train+serve pod stream through ICO ==")
     rng = np.random.default_rng(3)
@@ -51,9 +60,17 @@ def main():
             kind = f"train(cores={cores:.0f})"
         node = ico.select_node(pod, cluster.view())
         ok = node >= 0 and cluster.place(pod, node)
+        rec.resolve_admission(uid=pod.uid if ok else -1, placed=ok)
         placements.append((kind, node if ok else -1))
         cluster.rollout(10)
+        rec.begin_window(cluster.t)
         print(f"   pod {i:2d} {kind:18s} -> node {node if ok else 'REJECTED'}")
+
+    trace = Trace(rec.events)
+    placed = trace.query("admission", placed=True)
+    if placed:
+        print("\n== why did the first pod land there?  (from the trace) ==")
+        print(explain_pod(trace, placed[0].uid))
 
     view = cluster.view()
     print("\n== node utilization / interference after placement ==")

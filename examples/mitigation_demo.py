@@ -19,6 +19,13 @@ harmonics down), then projects node runqlat several windows ahead and
 lets the detector's forecast-CUSUM raise ``proactive`` flags on predicted
 drift — mitigation lands on an incident's leading edge instead of after
 it.  Day-scale simulation: expect a few minutes of wall clock.
+
+Both variants run with a ``TraceRecorder`` attached, so the demo ends
+with the decision trace's own account of the run: the event census and
+the full Planned -> Executed -> Verified lifecycle of the first
+mitigation, reconstructed from the trace alone.  Pass
+``--trace [PATH]`` to also save the JSONL trace for
+``python -m repro.obs.explain``.
 """
 import sys
 
@@ -28,6 +35,8 @@ from repro.cluster.simulator import Cluster
 from repro.cluster.workloads import OFFLINE_PROFILES, ONLINE_PROFILES, Pod
 from repro.control import ControlLoop, ControlLoopConfig
 from repro.core import ICOScheduler, InterferenceQuantifier
+from repro.obs import Trace, TraceRecorder
+from repro.obs.explain import explain_action, summarize, trust_history
 
 
 def make_online(name: str, qps: float) -> Pod:
@@ -38,14 +47,30 @@ def make_online(name: str, qps: float) -> Pod:
     return pod
 
 
+def _save_trace(rec: TraceRecorder) -> None:
+    if "--trace" in sys.argv:
+        i = sys.argv.index("--trace")
+        path = (sys.argv[i + 1]
+                if i + 1 < len(sys.argv)
+                and not sys.argv[i + 1].startswith("--")
+                else "mitigation_demo_trace.jsonl")
+        n = rec.save(path)
+        print(f"\nsaved {n} events to {path} "
+              f"(try: python -m repro.obs.explain {path})")
+
+
 def main() -> None:
     # a lightweight predictor: the node's current avg runqlat is the
     # predicted pod runqlat (the RF from bench_control is the slow version)
     quantifier = InterferenceQuantifier(lambda X: X[:, 21])
     scheduler = ICOScheduler(quantifier)
-    loop = ControlLoop(InterferenceQuantifier(lambda X: X[:, 21]))
+    rec = TraceRecorder()
+    scheduler.recorder = rec
+    loop = ControlLoop(InterferenceQuantifier(lambda X: X[:, 21]),
+                       recorder=rec)
     cluster = Cluster(num_nodes=6, seed=42)
     cluster.rollout(20)
+    rec.begin_window(cluster.t)
 
     print("== placing online fleet via ICO ==")
     for name, qps in [("web_search", 420), ("web_serving", 800),
@@ -55,6 +80,7 @@ def main() -> None:
         node = scheduler.select_node(pod, cluster.view())
         if node < 0 or not cluster.place(pod, node):
             raise RuntimeError(f"ICO could not place {name}")
+        rec.resolve_admission(uid=pod.uid, placed=True)
         print(f"  {name:16s} qps={qps:5.0f} -> node {node}")
         cluster.rollout(10)
 
@@ -75,6 +101,7 @@ def main() -> None:
     print("\n== control loop: detect -> attribute -> rank -> act -> verify ==")
     for step in range(8):
         cluster.rollout(10)
+        rec.begin_window(cluster.t)
         applied = loop.step(cluster)
         delays = np.round(cluster.last["delay"], 1)
         hot = loop.detector.last_diag["cusum"]
@@ -99,14 +126,26 @@ def main() -> None:
     print("learned corrections:", {k: round(v, 2) for k, v in loop.corrections.items()})
     print("final node delays:", np.round(cluster.last["delay"], 1))
 
+    trace = Trace(rec.events)
+    print("\n== what the decision trace says ==")
+    print(summarize(trace))
+    executed = trace.query("action_executed")
+    if executed:
+        print("\nfirst mitigation, reconstructed from the trace alone:")
+        print(explain_action(trace, executed[0].action_id))
+    _save_trace(rec)
+
 
 def proactive_main() -> None:
     quantifier = InterferenceQuantifier(lambda X: X[:, 21])
     scheduler = ICOScheduler(quantifier)
+    rec = TraceRecorder()
+    scheduler.recorder = rec
     loop = ControlLoop(InterferenceQuantifier(lambda X: X[:, 21]),
-                       ControlLoopConfig(proactive=True))
+                       ControlLoopConfig(proactive=True), recorder=rec)
     cluster = Cluster(num_nodes=6, seed=42)
     cluster.rollout(20)
+    rec.begin_window(cluster.t)
 
     print("== placing online fleet via ICO ==")
     for name, qps in [("web_search", 420), ("web_serving", 800),
@@ -116,6 +155,7 @@ def proactive_main() -> None:
         node = scheduler.select_node(pod, cluster.view())
         if node < 0 or not cluster.place(pod, node):
             raise RuntimeError(f"ICO could not place {name}")
+        rec.resolve_admission(uid=pod.uid, placed=True)
         cluster.rollout(10)
 
     prof = OFFLINE_PROFILES["graph_analytics"]
@@ -130,6 +170,7 @@ def proactive_main() -> None:
             job.mem_demand = 10.0 * prof.mem_per_core
             cluster.place(job, 0)
         cluster.rollout(window)
+        rec.begin_window(cluster.t)
         applied = loop.step(cluster)
         if not armed and loop.forecaster is not None:
             conf = loop.forecaster.confidence(cluster.t + 6 * window)
@@ -154,6 +195,19 @@ def proactive_main() -> None:
         print(f"forecaster one-step calibration error: "
               f"{loop.forecaster.calibration_error():.3f}")
     print("final node delays:", np.round(cluster.last["delay"], 1))
+
+    trace = Trace(rec.events)
+    print("\n== what the decision trace says ==")
+    print(summarize(trace))
+    if trace.query("trust_gate"):
+        print("\ntrust-gate history:")
+        print(trust_history(trace))
+    executed = trace.query("action_executed", proactive=True) \
+        or trace.query("action_executed")
+    if executed:
+        print("\nfirst mitigation, reconstructed from the trace alone:")
+        print(explain_action(trace, executed[0].action_id))
+    _save_trace(rec)
 
 
 if __name__ == "__main__":

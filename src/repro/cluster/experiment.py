@@ -31,6 +31,7 @@ from repro.cluster import workloads as W
 from repro.cluster.dataset import generate_latency_dataset, _random_pod
 from repro.cluster.simulator import TICKS_PER_DAY, Cluster
 from repro.cluster.workloads import Pod
+from repro.obs import PhaseTimers, PhaseTimings, RetryDrained, RetryQueued
 
 
 @dataclasses.dataclass
@@ -163,6 +164,7 @@ def run_experiment(
     control_window: int | None = None,
     retry_limit: int = 8,
     retry_attempts: int = 3,
+    recorder=None,
 ) -> ExperimentResult:
     """Replay one arrival trace under a scheduler.
 
@@ -195,11 +197,29 @@ def run_experiment(
         feasible; rejected pods are re-offered at each subsequent arrival
         tick, up to ``retry_attempts`` times, from a queue bounded at
         ``retry_limit`` (overflow and exhausted pods count as rejected).
+    recorder: optional ``repro.obs.TraceRecorder``.  When given, the run is
+        fully traced: the recorder is threaded into the scheduler (admission
+        decisions, restored on exit), the control loop and forecast service
+        (hotspots, actions, trust-gate flips — unless they already carry
+        their own recorder), and the driver itself (window boundaries,
+        retry-queue transitions, per-window phase timings).  Tracing only
+        observes; the simulated decisions are identical with or without it.
     """
     if control_loop is not None and not hasattr(control_loop, "step"):
         control_loop = control_loop()  # factory -> fresh per-run instance
     if forecast is not None and not hasattr(forecast, "observe"):
         forecast = forecast()          # factory -> fresh per-run instance
+    sched_recorder_prev = getattr(scheduler, "recorder", None)
+    if recorder is not None:
+        if control_loop is not None and control_loop.recorder is None:
+            control_loop.recorder = recorder
+        if forecast is not None and forecast.recorder is None:
+            forecast.recorder = recorder
+        if hasattr(scheduler, "recorder"):
+            scheduler.recorder = recorder
+    # the loop's timers double as the driver's, so rollout and control
+    # phases land in one summary; an uncontrolled run gets its own
+    timers = control_loop.timers if control_loop is not None else PhaseTimers()
     stats0 = (0, 0, 0.0, 0.0)
     if control_loop is not None:
         s = control_loop.stats
@@ -207,6 +227,8 @@ def run_experiment(
                   s.predicted_reduction, s.realized_reduction)
     cluster = Cluster(num_nodes=num_nodes, seed=seed)
     cluster.rollout(30)
+    if recorder is not None:
+        recorder.begin_window(cluster.t)
     rt_all: list[np.ndarray] = []
     cpu_series, mem_series = [], []
     placed = rejected = queued_retries = 0
@@ -229,21 +251,34 @@ def run_experiment(
             forecast.annotate(view)
         return view
 
-    def offer(pod: Pod, view) -> bool:
+    def offer(pod: Pod, view, retry: bool = False) -> bool:
         node = scheduler.select_node(pod, view)
-        return node >= 0 and cluster.place(pod, node)
+        ok = node >= 0 and cluster.place(pod, node)
+        if recorder is not None:
+            # the uid exists only after a successful place; bind it (and the
+            # outcome) onto the admission event the scheduler just emitted
+            recorder.resolve_admission(uid=pod.uid if ok else -1,
+                                       placed=ok, retry=retry)
+        return ok
 
     def drain_retries(view) -> None:
         nonlocal placed, rejected, queued_retries
         for _ in range(len(retry_q)):
             qpod, failed = retry_q.popleft()  # failed = prior re-offers
-            if offer(qpod, view):
+            if offer(qpod, view, retry=True):
                 placed += 1
                 queued_retries += 1
+                outcome, uid = "placed", qpod.uid
             elif failed + 1 >= retry_attempts:
                 rejected += 1
+                outcome, uid = "rejected", -1
             else:
                 retry_q.append((qpod, failed + 1))
+                outcome, uid = "requeued", -1
+            if recorder is not None:
+                recorder.emit(RetryDrained(
+                    workload=qpod.workload, qps=float(qpod.qps),
+                    outcome=outcome, uid=uid, attempts=failed + 1))
 
     def advance(ticks: int, record_util: bool = True) -> None:
         """Roll forward, sampling RT (and stepping the loop) per window.
@@ -261,11 +296,16 @@ def run_experiment(
             if stepped and control_window is not None:
                 w = min(control_window, ticks)
             t0 = cluster.t
-            cluster.rollout(w)
+            with timers.phase("rollout"):
+                cluster.rollout(w)
             rt_all.append(cluster.online_rt_samples())
             if record_util:
                 cpu_series.append(cluster.last["cpu_util"])
                 mem_series.append(cluster.last["mem_util"])
+            # window boundary: RT already sampled, control not yet stepped —
+            # this window's hotspot/action events carry the new index
+            if recorder is not None:
+                recorder.begin_window(cluster.t)
             if stepped:
                 view = last_view = cluster.view()
                 if forecast is not None:
@@ -275,6 +315,9 @@ def run_experiment(
                     # mitigation mutated placements: the cached view now
                     # predates them, so the next snapshot must rebuild
                     last_view = None
+            tw = timers.pop_window()
+            if recorder is not None and tw:
+                recorder.emit(PhaseTimings(timings=tw))
             # count the ticks actually simulated: rollout rounds up to CHUNK
             # multiples, and decrementing by the request would re-simulate
             # the rounding overshoot and diverge from an unsliced replay
@@ -289,6 +332,9 @@ def run_experiment(
             placed += 1
         elif retry_attempts > 0 and len(retry_q) < retry_limit:
             retry_q.append((pod, 0))
+            if recorder is not None:
+                recorder.emit(RetryQueued(workload=pod.workload,
+                                          qps=float(pod.qps), attempts=0))
         else:
             rejected += 1
         advance(gap)
@@ -296,6 +342,10 @@ def run_experiment(
     drain_retries(snapshot())
     rejected += len(retry_q)  # still queued at trace end: never placed
     advance(settle_ticks, record_util=False)
+    if recorder is not None and hasattr(scheduler, "recorder"):
+        scheduler.recorder = sched_recorder_prev  # schedulers are reused
+                                                  # across runs; the trace
+                                                  # belongs to this one
     rt = np.concatenate([r for r in rt_all if r.size] or [np.zeros(0)])
     if rt.size == 0:
         rt = np.full(1, np.nan)  # no online pod ever ran

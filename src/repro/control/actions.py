@@ -45,6 +45,9 @@ class Action:
                                         # — the window it targets is ahead)
     pre_runqlat: float = math.nan       # source node avg runqlat at apply time
     realized_reduction: float = math.nan  # observed delta, one step later
+    action_id: int = -1                 # trace chain id (assigned by the
+                                        # TraceRecorder when tracing is on;
+                                        # -1 on untraced runs)
 
     kind = "noop"
 

@@ -109,7 +109,9 @@ def _detector_update(hist, mu, cusum, f_cusum, slot_hist, slot_prev,
     mu = jnp.where(steps == 0, avg, (1.0 - alpha) * mu + alpha * avg)
     cusum = jnp.maximum(cusum + (avg - mu - slack), 0.0)
 
-    raw_hot = (cusum > drift_thr) | (p_tail > abs_thr)
+    drift_trip = cusum > drift_thr
+    acute_trip = p_tail > abs_thr
+    raw_hot = drift_trip | acute_trip
     hot = raw_hot & (steps >= warmup)
 
     # forecast channel: CUSUM of the *predicted* exceedance over the same
@@ -132,6 +134,8 @@ def _detector_update(hist, mu, cusum, f_cusum, slot_hist, slot_prev,
     # fire a spurious flag at exactly steps == warmup.  The ControlLoop
     # keeps un-acted flags pending across an interval skip so incidents
     # aren't lost to acting cadence.
+    cusum_trip = cusum      # pre-consumption values: what the flag tripped
+    f_cusum_trip = f_cusum  # on, before the reset below zeroes them
     cusum = jnp.where(raw_hot, 0.0, cusum)
     f_cusum = jnp.where(raw_hot | raw_pro, 0.0, f_cusum)
 
@@ -146,7 +150,13 @@ def _detector_update(hist, mu, cusum, f_cusum, slot_hist, slot_prev,
     slot_prev = s_avg
 
     diag = {"avg": avg, "p_tail": p_tail, "mu": mu, "cusum": cusum,
-            "f_cusum": f_cusum, "slot_avg": s_avg, "slot_score": slot_score}
+            "f_cusum": f_cusum, "slot_avg": s_avg, "slot_score": slot_score,
+            # trace-facing: pre-reset trip values and per-channel masks, so
+            # a HotspotFlag event can say which statistic fired and at what
+            # level (the post-reset cusum above reads 0 on every flag)
+            "cusum_trip": cusum_trip, "f_cusum_trip": f_cusum_trip,
+            "drift_hot": drift_trip & (steps >= warmup),
+            "acute_hot": acute_trip & (steps >= warmup)}
     return (hist, mu, cusum, f_cusum, slot_hist, slot_prev, slot_score,
             steps + 1, hot, proactive, diag)
 

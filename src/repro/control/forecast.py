@@ -277,6 +277,8 @@ class ForecastService:
                  horizon: float = 6.0):
         self.cfg = config or ForecastConfig()
         self.horizon = float(horizon)
+        self.recorder = None  # optional repro.obs.TraceRecorder; survives
+                              # reset() — the trace outlives a cluster swap
         self.reset()
 
     def reset(self) -> None:
@@ -284,6 +286,8 @@ class ForecastService:
         self._slot_uids: np.ndarray | None = None  # last online-slot tenants
         self._last_t: float | None = None          # clock at last observe
         self._dt: float | None = None              # EWMA ticks per window
+        self._trust_prev: np.ndarray | None = None  # node gate state at the
+        self._trust_emit_t: float | None = None     # last traced projection
 
     def clear_slots(self, nodes, slots) -> None:
         """Forget fits for (node, online-slot) pairs whose tenant changed."""
@@ -356,12 +360,44 @@ class ForecastService:
                              cfg.rho_cap)
         delta = (node_delay_curve(rho_fut)
                  - node_delay_curve(project_node_pressure(view, qps_now)))
+        node_trusted = trusted.any(axis=-1)
+        if self.recorder and (self._trust_emit_t is None
+                              or t != self._trust_emit_t):
+            # at most one transition scan per cluster time: project() may be
+            # called several times for the same window (mitigation loop +
+            # ICO-F annotate), and re-diffing would emit nothing new anyway
+            self._emit_trust_transitions(node_trusted, trusted, t_fut)
+            self._trust_emit_t = t
         return NodeProjection(
             runqlat=view.node_runqlat_avg() + delta,
             rho=rho_fut,
             delta=delta,
-            trusted=trusted.any(axis=-1),
+            trusted=node_trusted,
         )
+
+    def _emit_trust_transitions(self, node_trusted: np.ndarray,
+                                trusted: np.ndarray, t_fut: float) -> None:
+        """Emit a TrustGateTransition per node whose gate just flipped."""
+        prev, self._trust_prev = self._trust_prev, node_trusted.copy()
+        if prev is None or prev.shape != node_trusted.shape:
+            return  # first projection (or post-reset): baseline, no events
+        changed = np.nonzero(node_trusted != prev)[0]
+        if changed.size == 0:
+            return
+        from repro.obs import TrustGateTransition
+        f = self.forecaster
+        lev = np.asarray(_leverage(f.A, jnp.float32(t_fut), self.cfg.ridge))
+        err = np.asarray(f.err)
+        count = np.asarray(f.count)
+        for n in changed:
+            n = int(n)
+            seen = count[n] > 0  # slots with any fit history
+            self.recorder.emit(TrustGateTransition(
+                node=n, opened=bool(node_trusted[n]),
+                leverage=float(lev[n][seen].min()) if seen.any() else np.nan,
+                rel_err=float(err[n][seen].min()) if seen.any() else np.nan,
+                trusted_slots=int(trusted[n].sum()),
+            ))
 
     def annotate(self, view):
         """Fill the view's forecast fields in place (no-op while closed)."""

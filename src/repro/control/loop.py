@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import weakref
+from collections import deque
 
 import numpy as np
 
@@ -59,6 +60,14 @@ from repro.control.actions import Action
 from repro.control.detector import DetectorConfig, StreamingDetector
 from repro.control.forecast import ForecastConfig, ForecastService
 from repro.control.policy import MitigationPolicy, PolicyConfig
+from repro.obs import (
+    ActionExecuted,
+    ActionVerified,
+    HotspotFlag,
+    MetricsRegistry,
+    PhaseTimers,
+    PhaseTimings,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +87,10 @@ class ControlLoopConfig:
                              # of phase at the bench cadence), short enough
                              # that the acted-on window arrives within a few
                              # cooldown periods
+    history_limit: int = 512  # ring-buffer bound on ControlLoop.history —
+                              # week-long traces flag thousands of windows
+                              # and the full record belongs in the trace
+                              # artifact, not in resident memory
     detector: DetectorConfig = dataclasses.field(default_factory=DetectorConfig)
     policy: PolicyConfig = dataclasses.field(default_factory=PolicyConfig)
     forecast: ForecastConfig = dataclasses.field(default_factory=ForecastConfig)
@@ -85,6 +98,14 @@ class ControlLoopConfig:
 
 @dataclasses.dataclass
 class ControlStats:
+    """Backward-compatible snapshot view over the loop's metrics registry.
+
+    The counters themselves now live in ``ControlLoop.metrics`` (a
+    ``repro.obs.MetricsRegistry``); ``ControlLoop.stats`` assembles one of
+    these on each access, so every existing reader — benches, tests,
+    examples — keeps working unchanged.
+    """
+
     steps: int = 0
     hotspots_flagged: int = 0
     proactive_flagged: int = 0   # forecast-channel flags (predicted drift)
@@ -102,16 +123,29 @@ class ControlStats:
         """Mean relative |realized - predicted| error of the cost model."""
         return self.calibration_abs_error / max(self.predicted_reduction, 1e-9)
 
+    @property
+    def mean_calibration_abs_error(self) -> float:
+        """Mean |realized - predicted| per verified action (latency units).
+
+        The one canonical denominator: benches used to re-derive this from
+        ``calibration_abs_error`` with subtly different divisors (verified
+        count here, predicted sum there).  0.0 with nothing verified.
+        """
+        return self.calibration_abs_error / max(self.actions_verified, 1)
+
 
 class ControlLoop:
     """Runtime interference-mitigation controller for one cluster."""
 
     def __init__(self, quantifier, config: ControlLoopConfig | None = None,
-                 forecast_service: ForecastService | None = None):
+                 forecast_service: ForecastService | None = None,
+                 recorder=None):
         self.cfg = config or ControlLoopConfig()
         self.policy = MitigationPolicy(quantifier, self.cfg.policy)
-        self.stats = ControlStats()
-        self.history: list[dict] = []
+        # counters live here; `loop.stats` assembles the ControlStats view
+        self.metrics = MetricsRegistry()
+        self.timers = PhaseTimers()
+        self.history: deque[dict] = deque(maxlen=self.cfg.history_limit)
         # per-kind multiplicative calibration of predicted_reduction,
         # learned online from post-action verification (1.0 = trust model)
         self.corrections: dict[str, float] = {}
@@ -124,7 +158,40 @@ class ControlLoop:
         # when the loop's forecast knobs are tuned, or cfg.forecast/
         # cfg.horizon are silently unused
         self._external_forecast = forecast_service
+        self._recorder = recorder
         self.reset()
+
+    @property
+    def stats(self) -> ControlStats:
+        """Snapshot of the metrics registry as the legacy ControlStats."""
+        v = self.metrics.value
+        return ControlStats(
+            steps=int(v("steps")),
+            hotspots_flagged=int(v("hotspots_flagged")),
+            proactive_flagged=int(v("proactive_flagged")),
+            actions_planned=int(v("actions_planned")),
+            actions_applied=int(v("actions_applied")),
+            proactive_applied=int(v("proactive_applied")),
+            actions_verified=int(v("actions_verified")),
+            verifications_discarded=int(v("verifications_discarded")),
+            predicted_reduction=v("predicted_reduction"),
+            realized_reduction=v("realized_reduction"),
+            calibration_abs_error=v("calibration_abs_error"),
+            by_kind={name[len("applied_kind."):]: int(c) for name, c
+                     in self.metrics.counters("applied_kind.").items()},
+        )
+
+    @property
+    def recorder(self):
+        return self._recorder
+
+    @recorder.setter
+    def recorder(self, rec) -> None:
+        self._recorder = rec
+        # an internally-owned forecast service traces into the same sink;
+        # an external (shared) one belongs to its owner, who wires it
+        if self._external_forecast is None and self.forecast_service is not None:
+            self.forecast_service.recorder = rec
 
     def reset(self) -> None:
         """Forget per-cluster state: detector, cooldowns, pending checks.
@@ -145,6 +212,8 @@ class ControlLoop:
             self.forecast_service = (
                 ForecastService(self.cfg.forecast, self.cfg.horizon)
                 if self.cfg.proactive else None)
+            if self.forecast_service is not None:
+                self.forecast_service.recorder = self._recorder
         self._cluster_ref = lambda: None
         self._last_acted: dict[int, int] = {}      # node -> step of last action
         self._uid_last_acted: dict[int, int] = {}  # pod uid -> step (anti-ping-pong)
@@ -190,13 +259,22 @@ class ControlLoop:
         if not self._to_verify:
             return verified
         cfg = self.cfg
+        m = self.metrics
+        rec = self._recorder
         by_node: dict[int, list[Action]] = {}
         for a in self._to_verify:
             by_node.setdefault(a.node, []).append(a)
         for node, acts in by_node.items():
             now = self._node_signature(cluster, node)
             if now != self._verify_sig.get(node):
-                self.stats.verifications_discarded += len(acts)
+                m.inc("verifications_discarded", len(acts))
+                if rec:
+                    for a in acts:
+                        rec.emit(ActionVerified(
+                            action=a.kind, action_id=a.action_id, node=node,
+                            outcome="discarded",
+                            predicted=a.predicted_reduction,
+                            reason="signature_changed"))
                 continue
             delta = float(acts[0].pre_runqlat - window_avg[node])
             total_pred = sum(a.predicted_reduction for a in acts)
@@ -210,11 +288,17 @@ class ControlLoop:
                 self.corrections[a.kind] = float(np.clip(
                     (1.0 - cfg.corr_beta) * old + cfg.corr_beta * ratio,
                     cfg.corr_min, cfg.corr_max))
-                self.stats.actions_verified += 1
-                self.stats.predicted_reduction += a.predicted_reduction
-                self.stats.realized_reduction += a.realized_reduction
-                self.stats.calibration_abs_error += abs(
-                    a.realized_reduction - a.predicted_reduction)
+                m.inc("actions_verified")
+                m.inc("predicted_reduction", a.predicted_reduction)
+                m.inc("realized_reduction", a.realized_reduction)
+                m.inc("calibration_abs_error",
+                      abs(a.realized_reduction - a.predicted_reduction))
+                if rec:
+                    rec.emit(ActionVerified(
+                        action=a.kind, action_id=a.action_id, node=node,
+                        outcome="verified", predicted=a.predicted_reduction,
+                        realized=a.realized_reduction,
+                        correction=self.corrections[a.kind]))
                 verified.append({
                     "node": node, "kind": a.kind,
                     "predicted": a.predicted_reduction,
@@ -296,15 +380,22 @@ class ControlLoop:
         # raw last-window node average (NOT the detector's decayed estimate):
         # verification compares like with like across two adjacent windows
         window_avg = view.node_runqlat_avg()
-        verified = self._verify(cluster, window_avg)
-        forecast_avg, forecast_rho = self._forecast(view, window_avg)
-        hot = self.detector.update(slot_hists, forecast_avg)
+        with self.timers.phase("verify"):
+            verified = self._verify(cluster, window_avg)
+        with self.timers.phase("forecast"):
+            forecast_avg, forecast_rho = self._forecast(view, window_avg)
+        with self.timers.phase("detect"):
+            hot = self.detector.update(slot_hists, forecast_avg)
         pro = self.detector.last_proactive
         if pro is None:
             pro = np.zeros(cluster.n, bool)
-        self.stats.steps += 1
-        self.stats.hotspots_flagged += int(hot.sum())
-        self.stats.proactive_flagged += int(pro.sum())
+        m = self.metrics
+        rec = self._recorder
+        step_no = int(m.inc("steps"))
+        m.inc("hotspots_flagged", int(hot.sum()))
+        m.inc("proactive_flagged", int(pro.sum()))
+        if rec and (hot.any() or pro.any()):
+            self._emit_hotspots(hot, pro)
 
         # flags consumed on a slower cadence than they are produced stay
         # pending for one acting interval, so interval > 1 can't lose them.
@@ -313,13 +404,13 @@ class ControlLoop:
         # if it is still genuinely hot the drift re-accumulates (or the
         # acute p-tail path refires) once telemetry reflects the action
         for node in np.nonzero(hot)[0]:
-            self._pending[int(node)] = self.stats.steps
+            self._pending[int(node)] = step_no
             self._pending_pro.pop(int(node), None)  # reactive outranks
         for node in np.nonzero(pro)[0]:
             if int(node) not in self._pending:
-                self._pending_pro[int(node)] = self.stats.steps
+                self._pending_pro[int(node)] = step_no
         keep = lambda d: {n: s for n, s in d.items()  # noqa: E731
-                          if self.stats.steps - s < self.cfg.interval}
+                          if step_no - s < self.cfg.interval}
         self._pending = keep(self._pending)
         self._pending_pro = keep(self._pending_pro)
 
@@ -329,25 +420,27 @@ class ControlLoop:
         actionable[list(self._pending)] = True
         actionable[list(self._pending_pro)] = True
         for node, step in self._last_acted.items():
-            if self.stats.steps - step < self.cfg.cooldown:
+            if step_no - step < self.cfg.cooldown:
                 actionable[node] = False
         proactive_mask = np.zeros(cluster.n, bool)
         proactive_mask[list(self._pending_pro)] = True
         proactive_mask &= actionable
 
         applied: list[Action] = []
-        if actionable.any() and self.stats.steps % self.cfg.interval == 0:
+        if actionable.any() and step_no % self.cfg.interval == 0:
             recently_acted = frozenset(
                 uid for uid, step in self._uid_last_acted.items()
-                if self.stats.steps - step < self.cfg.uid_cooldown
+                if step_no - step < self.cfg.uid_cooldown
             )
-            plan = self.policy.plan(cluster, view, actionable,
-                                    exclude_uids=recently_acted,
-                                    corrections=self.corrections,
-                                    attribution=self.detector.attribution(),
-                                    proactive=proactive_mask,
-                                    forecast_pressure=forecast_rho)
-            self.stats.actions_planned += len(plan)
+            with self.timers.phase("plan"):
+                plan = self.policy.plan(cluster, view, actionable,
+                                        exclude_uids=recently_acted,
+                                        corrections=self.corrections,
+                                        attribution=self.detector.attribution(),
+                                        proactive=proactive_mask,
+                                        forecast_pressure=forecast_rho,
+                                        recorder=rec)
+            m.inc("actions_planned", len(plan))
             for action in plan:
                 if action.apply(cluster):
                     applied.append(action)
@@ -357,30 +450,38 @@ class ControlLoop:
                         # mitigates is horizon steps ahead, and judging it
                         # on next window's delta would poison the per-kind
                         # corrections with structurally-absent relief
-                        self.stats.proactive_applied += 1
+                        m.inc("proactive_applied")
                     else:
                         self._to_verify.append(action)
-                    self.stats.actions_applied += 1
-                    self.stats.by_kind[action.kind] = (
-                        self.stats.by_kind.get(action.kind, 0) + 1
-                    )
+                    m.inc("actions_applied")
+                    m.inc(f"applied_kind.{action.kind}")
                     if not action.proactive:
                         # proactive actions skip the node cooldown: they are
                         # gentle bets placed BEFORE the worst window, and if
                         # the incident still develops the reactive track
                         # must be free to respond immediately — per-pod
                         # uid_cooldown already prevents ping-pong
-                        self._last_acted[action.node] = self.stats.steps
+                        self._last_acted[action.node] = step_no
                     self._pending.pop(action.node, None)
                     self._pending_pro.pop(action.node, None)
                     uid = getattr(action, "uid", -1)
                     if uid >= 0:
-                        self._uid_last_acted[uid] = self.stats.steps
+                        self._uid_last_acted[uid] = step_no
+                    if rec:
+                        rec.emit(ActionExecuted(
+                            action=action.kind, action_id=action.action_id,
+                            node=action.node, uid=uid,
+                            dst=getattr(action, "dst", -1),
+                            proactive=action.proactive,
+                            pre_runqlat=action.pre_runqlat,
+                            predicted_reduction=action.predicted_reduction))
             for node in {a.node for a in applied if not a.proactive}:
                 self._verify_sig[node] = self._node_signature(cluster, node)
         if hot.any() or pro.any() or applied or verified:
             self.history.append({
-                "step": self.stats.steps,
+                "step": step_no,
+                "window": rec.window if rec else step_no - 1,
+                "t": float(view.t),
                 "hot_nodes": np.nonzero(hot)[0].tolist(),
                 "proactive_nodes": np.nonzero(pro)[0].tolist(),
                 "hot_slots": self.detector.hot_slots(),
@@ -388,6 +489,36 @@ class ControlLoop:
                 "verified": verified,
             })
         return applied
+
+    def _emit_hotspots(self, hot: np.ndarray, pro: np.ndarray) -> None:
+        """One HotspotFlag per flagged node, from the detector diagnostics.
+
+        ``cusum``/``f_cusum`` are the pre-consumption trip values the diag
+        exposes for exactly this purpose (the live accumulators read zero
+        on every flag — flagging consumes them).
+        """
+        rec = self._recorder
+        diag = self.detector.last_diag
+        slots = self.detector.hot_slots()
+        scores = self.detector.slot_scores
+        for node in np.nonzero(hot | pro)[0]:
+            node = int(node)
+            if pro[node]:
+                channel = "forecast"
+            elif diag["drift_hot"][node]:
+                channel = "drift"
+            else:
+                channel = "acute"
+            slot = slots.get(node, -1)
+            rec.emit(HotspotFlag(
+                node=node, channel=channel,
+                avg=float(diag["avg"][node]), mu=float(diag["mu"][node]),
+                p_tail=float(diag["p_tail"][node]),
+                cusum=float(diag["cusum_trip"][node]),
+                f_cusum=float(diag["f_cusum_trip"][node]),
+                slot=slot,
+                slot_score=float(scores[node, slot]) if slot >= 0 else 0.0,
+            ))
 
     def run(self, cluster, num_ticks: int, k: int | None = None) -> ControlStats:
         """Interleave rollout and control every ~k ticks (standalone driver).
@@ -400,9 +531,11 @@ class ControlLoop:
         """
         k = k or cluster.CHUNK
         done = 0
+        rec = self._recorder
         while done < num_ticks:
             t0 = cluster.t
-            cluster.rollout(min(k, num_ticks - done))
+            with self.timers.phase("rollout"):
+                cluster.rollout(min(k, num_ticks - done))
             progress = int(cluster.t - t0)
             if progress <= 0:
                 raise RuntimeError(
@@ -411,7 +544,12 @@ class ControlLoop:
                     f"forever — check num_ticks vs the cluster's chunking"
                 )
             done += progress
+            if rec:
+                rec.begin_window(cluster.t)
             self.step(cluster)
+            tw = self.timers.pop_window()
+            if rec and tw:
+                rec.emit(PhaseTimings(timings=tw))
         return self.stats
 
 

@@ -29,22 +29,46 @@ def _projected_utilization(pod, view, cfg: SchedulerConfig):
     return cpu, mem, feasible
 
 
+def _emit_admission(scheduler, pod, best: int, breakdown: dict) -> None:
+    """Shared AdmissionDecision emission for the baseline schedulers.
+
+    Each baseline records the terms its own policy actually scored on —
+    the trace explains the decision as made, not as ICO would have made it.
+    """
+    from repro.obs import AdmissionDecision
+    scheduler.recorder.emit(AdmissionDecision(
+        scheduler=scheduler.name, workload=pod.workload, qps=float(pod.qps),
+        online=bool(pod.is_online), cpu_demand=float(pod.cpu_demand),
+        mem_demand=float(pod.mem_demand), chosen=int(best),
+        breakdown=breakdown,
+    ))
+
+
 class RoundRobinScheduler:
     name = "RR"
 
     def __init__(self, config: SchedulerConfig | None = None):
         self.cfg = config or SchedulerConfig()
         self._next = 0
+        self.recorder = None
 
     def select_node(self, pod, view) -> int:
         n = len(np.asarray(view.cpu_cur))
+        rotation_start = self._next
         _, _, feasible = _projected_utilization(pod, view, self.cfg)
+        best = -1
         for k in range(n):
             idx = (self._next + k) % n
             if feasible[idx]:
                 self._next = (idx + 1) % n
-                return int(idx)
-        return -1
+                best = int(idx)
+                break
+        if self.recorder:
+            _emit_admission(self, pod, best, {
+                "feasible": feasible,
+                "rotation_start": rotation_start,
+            })
+        return best
 
 
 class HUPScheduler:
@@ -55,6 +79,7 @@ class HUPScheduler:
     def __init__(self, quantifier, config: SchedulerConfig | None = None):
         self.q = quantifier
         self.cfg = config or SchedulerConfig()
+        self.recorder = None
 
     def select_node(self, pod, view) -> int:
         cpu, mem, feasible = _projected_utilization(pod, view, self.cfg)
@@ -63,7 +88,14 @@ class HUPScheduler:
         score = cpu * mem - intf_h - intf_p  # Eq. (7)
         score = np.where(feasible, score, -np.inf)
         best = int(np.argmax(score))
-        return best if np.isfinite(score[best]) else -1
+        best = best if np.isfinite(score[best]) else -1
+        if self.recorder:
+            _emit_admission(self, pod, best, {
+                "utiliz_cpu": cpu, "utiliz_mem": mem,
+                "intf_h": np.asarray(intf_h), "intf_p": np.asarray(intf_p),
+                "feasible": feasible, "score": score,
+            })
+        return best
 
 
 class LQPScheduler:
@@ -73,10 +105,16 @@ class LQPScheduler:
 
     def __init__(self, config: SchedulerConfig | None = None):
         self.cfg = config or SchedulerConfig()
+        self.recorder = None
 
     def select_node(self, pod, view) -> int:
         _, _, feasible = _projected_utilization(pod, view, self.cfg)
         qps = np.asarray(view.online_qps_sum, np.float64)
         qps = np.where(feasible, qps, np.inf)
         best = int(np.argmin(qps))
-        return best if np.isfinite(qps[best]) else -1
+        best = best if np.isfinite(qps[best]) else -1
+        if self.recorder:
+            _emit_admission(self, pod, best, {
+                "online_qps_sum": qps, "feasible": feasible,
+            })
+        return best

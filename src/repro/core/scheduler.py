@@ -69,12 +69,19 @@ class ICOScheduler:
     def __init__(self, quantifier, config: SchedulerConfig | None = None):
         self.q = quantifier
         self.cfg = config or SchedulerConfig()
+        self.recorder = None  # optional repro.obs.TraceRecorder: when set,
+                              # select_node emits an AdmissionDecision with
+                              # the per-node Eq. (4)-(6) breakdown
 
     def _interference(self, pod, view):
         """(intf_h, intf_p) for Eq. (4) — the hook ICO-F augments."""
         intf_h = self.q.intf_nodes(view.online_hists, view.offline_hists)
         intf_p = self.q.intf_pod(pod.qps, view.features)
         return intf_h, intf_p
+
+    def _forecast_term(self, view):
+        """Per-node forecast addend to ``intf_h`` (None for plain ICO)."""
+        return None
 
     def _score(self, pod, view):
         intf_h, intf_p = self._interference(pod, view)
@@ -101,12 +108,55 @@ class ICOScheduler:
              histograms, Table-III node features).
         Returns the selected node index or -1.
         """
-        best, _ = self._score(pod, view)
+        best, score = self._score(pod, view)
+        if self.recorder:
+            self.recorder.emit(
+                self._admission_event(pod, view, np.asarray(score), int(best)))
         return int(best)
 
     def scores(self, pod, view) -> np.ndarray:
         _, score = self._score(pod, view)
         return np.asarray(score)
+
+    def _admission_event(self, pod, view, score: np.ndarray, best: int):
+        """Build the AdmissionDecision with the Eq. (4)-(6) term breakdown.
+
+        The breakdown is recomputed in numpy from the same view the jit'd
+        scorer consumed — cheap relative to the RF behind ``intf_pod``, and
+        it makes the trace self-contained: ``repro.obs.explain`` (and the
+        round-trip test) reproduce the recorded ``score`` from the stored
+        terms alone, without a cluster or a predictor in hand.
+        """
+        from repro.obs import AdmissionDecision
+        cfg = self.cfg
+        cpu_sum = np.asarray(view.cpu_sum, np.float64)
+        mem_sum = np.asarray(view.mem_sum, np.float64)
+        utiliz_cpu = (np.asarray(view.cpu_cur) + cfg.w_d * pod.cpu_demand) / cpu_sum
+        utiliz_mem = (np.asarray(view.mem_cur) + cfg.w_e * pod.mem_demand) / mem_sum
+        feasible = ((utiliz_cpu <= cfg.cpu_threshold)
+                    & (utiliz_mem <= cfg.mem_threshold))
+        intf_h, intf_p = self._interference(pod, view)
+        breakdown = {
+            "utiliz_cpu": utiliz_cpu,
+            "utiliz_mem": utiliz_mem,
+            "intf_h": np.asarray(intf_h),
+            "intf_p": np.asarray(intf_p),
+            "feasible": feasible,
+            "score": score,
+        }
+        fterm = self._forecast_term(view)
+        if fterm is not None:
+            breakdown["forecast_term"] = np.asarray(fterm)
+            # intf_h above already absorbed the forecast addend (ICO-F's
+            # _interference hook); split it back out so the stored terms
+            # decompose the score without double-counting
+            breakdown["intf_h"] = breakdown["intf_h"] - breakdown["forecast_term"]
+        return AdmissionDecision(
+            scheduler=self.name, workload=pod.workload, qps=float(pod.qps),
+            online=bool(pod.is_online), cpu_demand=float(pod.cpu_demand),
+            mem_demand=float(pod.mem_demand), chosen=best,
+            breakdown=breakdown,
+        )
 
 
 class ICOFScheduler(ICOScheduler):
@@ -137,7 +187,13 @@ class ICOFScheduler(ICOScheduler):
 
     def _interference(self, pod, view):
         intf_h, intf_p = super()._interference(pod, view)
-        drift = view.forecast_drift()
-        if drift is not None:
-            intf_h = np.asarray(intf_h) + self.w_f * INTF_NORM * drift
+        fterm = self._forecast_term(view)
+        if fterm is not None:
+            intf_h = np.asarray(intf_h) + fterm
         return intf_h, intf_p
+
+    def _forecast_term(self, view):
+        drift = view.forecast_drift()
+        if drift is None:
+            return None
+        return self.w_f * INTF_NORM * drift

@@ -1,0 +1,63 @@
+"""Observability layer: decision traces, metrics registry, phase timers.
+
+Deliberately free of jax imports — the control plane and the experiment
+driver import this unconditionally, and trace *readers* (the ``explain``
+CLI, CI chain checks) must work without touching an accelerator.
+"""
+from repro.obs.events import (
+    ActionExecuted,
+    ActionPlanned,
+    ActionVerified,
+    AdmissionDecision,
+    Event,
+    EVENT_TYPES,
+    GenericEvent,
+    HotspotFlag,
+    PhaseTimings,
+    RetryDrained,
+    RetryQueued,
+    TrustGateTransition,
+    event_from_dict,
+    jsonable,
+)
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    MetricsRegistry,
+    WindowedHistogram,
+)
+from repro.obs.recorder import (
+    NULL_RECORDER,
+    NullRecorder,
+    Trace,
+    TraceRecorder,
+    load_trace,
+)
+from repro.obs.timers import PhaseTimers
+
+__all__ = [
+    "ActionExecuted",
+    "ActionPlanned",
+    "ActionVerified",
+    "AdmissionDecision",
+    "Counter",
+    "Event",
+    "EVENT_TYPES",
+    "Gauge",
+    "GenericEvent",
+    "HotspotFlag",
+    "MetricsRegistry",
+    "NULL_RECORDER",
+    "NullRecorder",
+    "PhaseTimers",
+    "PhaseTimings",
+    "RetryDrained",
+    "RetryQueued",
+    "Trace",
+    "TraceRecorder",
+    "TrustGateTransition",
+    "WindowedHistogram",
+    "event_from_dict",
+    "jsonable",
+    "load_trace",
+]
