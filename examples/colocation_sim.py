@@ -37,7 +37,7 @@ def main():
     ico.recorder = rec
 
     cluster = Cluster(num_nodes=6, seed=3)
-    cluster.rollout(30)
+    cluster.rollout_scan(30)
     rec.begin_window(cluster.t)
 
     print("== submitting a mixed train+serve pod stream through ICO ==")
@@ -62,7 +62,7 @@ def main():
         ok = node >= 0 and cluster.place(pod, node)
         rec.resolve_admission(uid=pod.uid if ok else -1, placed=ok)
         placements.append((kind, node if ok else -1))
-        cluster.rollout(10)
+        cluster.rollout_scan(10)
         rec.begin_window(cluster.t)
         print(f"   pod {i:2d} {kind:18s} -> node {node if ok else 'REJECTED'}")
 

@@ -10,7 +10,8 @@ plane (``repro.control``), and the training-data generator all read the
 same dataclass instead of re-interpreting an untyped dict, so a new
 telemetry field is declared exactly once.
 """
-from repro.cluster.simulator import Cluster, NodeSpec, S_ON, S_OFF
+from repro.cluster.simulator import Cluster, ClusterState, NodeSpec, S_ON, S_OFF
+from repro.cluster.state import batched_rollout, scan_windows
 from repro.cluster.view import ClusterView
 from repro.cluster.workloads import (
     Pod,
@@ -22,8 +23,11 @@ from repro.cluster.workloads import (
 
 __all__ = [
     "Cluster",
+    "ClusterState",
     "ClusterView",
     "NodeSpec",
+    "batched_rollout",
+    "scan_windows",
     "S_ON",
     "S_OFF",
     "Pod",

@@ -165,6 +165,8 @@ def run_experiment(
     retry_limit: int = 8,
     retry_attempts: int = 3,
     recorder=None,
+    fast: bool | None = None,
+    plan_out: dict | None = None,
 ) -> ExperimentResult:
     """Replay one arrival trace under a scheduler.
 
@@ -204,6 +206,18 @@ def run_experiment(
         their own recorder), and the driver itself (window boundaries,
         retry-queue transitions, per-window phase timings).  Tracing only
         observes; the simulated decisions are identical with or without it.
+    fast: rollout path selection.  ``True`` drives every window through
+        ``Cluster.rollout_scan`` (all chunks in one jit dispatch), ``False``
+        through the legacy per-chunk Python loop.  Default (``None``): fast
+        unless a recorder is attached — recorder runs are the reference
+        artifacts (per-window PhaseTimings, regression forensics), so they
+        stay on the historical Python path whose per-chunk dispatch the
+        recorded timings describe.  Both paths consume the identical key
+        stream and merge, so results match bit-for-bit either way.
+    plan_out: optional dict, filled on exit with the run's replayable plan
+        (the cluster's mutation log + trace geometry) for
+        ``replay_plan_batched`` — the vmapped many-seed re-evaluation of
+        this exact placement/action schedule.
     """
     if control_loop is not None and not hasattr(control_loop, "step"):
         control_loop = control_loop()  # factory -> fresh per-run instance
@@ -226,7 +240,9 @@ def run_experiment(
         stats0 = (s.actions_applied, s.proactive_applied,
                   s.predicted_reduction, s.realized_reduction)
     cluster = Cluster(num_nodes=num_nodes, seed=seed)
-    cluster.rollout(30)
+    use_scan = fast if fast is not None else (recorder is None)
+    roll = cluster.rollout_scan if use_scan else cluster.rollout
+    roll(30)
     if recorder is not None:
         recorder.begin_window(cluster.t)
     rt_all: list[np.ndarray] = []
@@ -297,7 +313,7 @@ def run_experiment(
                 w = min(control_window, ticks)
             t0 = cluster.t
             with timers.phase("rollout"):
-                cluster.rollout(w)
+                roll(w)
             rt_all.append(cluster.online_rt_samples())
             if record_util:
                 cpu_series.append(cluster.last["cpu_util"])
@@ -359,6 +375,14 @@ def run_experiment(
         proactive = s.proactive_applied - stats0[1]
         predicted = s.predicted_reduction - stats0[2]
         realized = s.realized_reduction - stats0[3]
+    if plan_out is not None:
+        plan_out.update(
+            log=list(cluster.log),
+            t_end=float(cluster.t),
+            num_nodes=num_nodes,
+            seed=seed,
+            settle_ticks=settle_ticks,
+        )
     return ExperimentResult(
         scheduler=scheduler.name,
         avg_rt=float(rt.mean()),
@@ -374,6 +398,108 @@ def run_experiment(
         predicted_reduction=predicted,
         realized_reduction=realized,
     )
+
+
+def replay_plan_batched(
+    plan: dict,
+    sim_seeds=tuple(range(20)),
+    window_ticks: int = 40,
+) -> dict:
+    """Re-evaluate one run's placement/action plan under many sim seeds.
+
+    ``plan`` is the ``plan_out`` dict of a ``run_experiment`` call: the
+    mutation log plus trace geometry.  The plan is replayed verbatim —
+    identical placements, migrations, evictions and resizes at identical
+    times — against ``len(sim_seeds)`` independent telemetry streams in ONE
+    vmapped ``state.batched_rollout`` call (common-random-placements
+    design: the seed axis isolates simulation noise from placement
+    quality).  A seed equal to the reference run's reproduces its exact
+    key stream, so that entry doubles as a parity check.
+
+    Returns ``{"seeds": [...], "wall_s": float, "num_windows": int}``;
+    each per-seed entry carries avg/p90/p99 RT, arrival-phase cross-node
+    cpu/mem util std (window-level, so not directly comparable with the
+    reference's variable-length control windows), and the folded
+    detector's hot-window count.  Warmup ticks (< 30) and any padding
+    past ``t_end`` are excluded from the RT pool, matching the reference
+    driver's sampling span.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.cluster import state as cstate
+
+    t_end = int(round(plan["t_end"]))
+    num_nodes = plan["num_nodes"]
+    settle_ticks = plan.get("settle_ticks", 40)
+    total_chunks = t_end // cstate.CHUNK
+    cpw = max(1, window_ticks // cstate.CHUNK)
+    num_windows = -(-total_chunks // cpw)
+    span = cpw * cstate.CHUNK
+    events = cstate.extract_plan(plan["log"], 0.0, num_windows, cpw)
+    keys = jnp.stack([
+        cstate.chunk_key_stream(jax.random.PRNGKey(s), num_windows * cpw)[1]
+        .reshape(num_windows, cpw, -1)
+        for s in sim_seeds
+    ])
+    state0 = cstate.ClusterState.create(num_nodes)
+    profiles = {k: jnp.asarray(v) for k, v in W.online_arrays().items()}
+
+    t0 = time.time()
+    final, outs = cstate.batched_rollout(state0, profiles, 0.0, keys, events)
+    rt = np.asarray(outs["rt"])          # (B, W, span, N, S_ON) -> forces sync
+    wall_s = time.time() - t0
+
+    cpu = np.asarray(outs["cpu_util"])   # (B, W, N)
+    mem = np.asarray(outs["mem_util"])
+    hot = np.asarray(outs["hot"])        # (B, W, N)
+    tick_idx = (np.arange(num_windows)[:, None] * span
+                + np.arange(span)[None, :])          # (W, span) global tick
+    valid = (tick_idx >= 30) & (tick_idx < t_end)    # skip warmup + padding
+    w_start = np.arange(num_windows) * span
+    util_wins = (w_start >= 30) & (w_start + span <= t_end - settle_ticks)
+    if not util_wins.any():
+        util_wins = np.ones(num_windows, bool)       # degenerate short trace
+
+    seeds_out = []
+    for i, s in enumerate(sim_seeds):
+        r = rt[i][valid]
+        samples = r[r > 0]
+        if samples.size == 0:
+            samples = np.full(1, np.nan)
+        seeds_out.append({
+            "sim_seed": int(s),
+            "avg_rt": float(samples.mean()),
+            "p90_rt": float(np.percentile(samples, 90)),
+            "p99_rt": float(np.percentile(samples, 99)),
+            "cpu_util_std": float((100 * cpu[i][util_wins]).std(axis=1).mean()),
+            "mem_util_std": float((100 * mem[i][util_wins]).std(axis=1).mean()),
+            "hot_windows": int(hot[i].any(-1).sum()),
+        })
+    return {"seeds": seeds_out, "wall_s": wall_s, "num_windows": num_windows}
+
+
+def run_experiment_batched(
+    scheduler,
+    pods: list[Pod],
+    gaps: list[int],
+    num_nodes: int = 12,
+    seed: int = 7,
+    sim_seeds=tuple(range(20)),
+    window_ticks: int = 40,
+    **run_kwargs,
+) -> tuple[ExperimentResult, dict]:
+    """One reference ``run_experiment`` (scanned fast path) + a vmapped
+    replay of its plan across ``sim_seeds``.  Returns (reference_result,
+    ``replay_plan_batched`` output)."""
+    plan: dict = {}
+    ref = run_experiment(scheduler, pods, gaps, num_nodes=num_nodes,
+                         seed=seed, plan_out=plan, **run_kwargs)
+    batch = replay_plan_batched(plan, sim_seeds=sim_seeds,
+                                window_ticks=window_ticks)
+    return ref, batch
 
 
 def compare_schedulers(

@@ -14,292 +14,128 @@ computes, for every node in one jit'd call:
     and loses information, which is exactly the paper's motivation),
   * Table-III telemetry: perf metrics, hardware events, runqlat histograms.
 
-The per-tick state transition is pure; rollout() scans W ticks in one call.
+The simulation core lives in ``repro.cluster.state``: an immutable
+``ClusterState`` pytree, pure place/migrate/evict/resize/reconcile array
+transforms, and the tick/window scan kernels.  ``Cluster`` here is the thin
+stateful shell the drivers talk to — it owns the host-side bookkeeping
+(pod-uid map, numpy RNG for phases/bursts, the JAX key), delegates every
+mutation to the pure transforms, and **logs each mutation as a replayable
+event** so an entire run's placement/mitigation schedule can be replayed
+inside the scanned core (``state.scan_windows`` / ``state.batched_rollout``)
+under fresh simulation seeds.
+
+Two rollout paths, identical semantics:
+
+  * ``rollout(n)``   — the legacy chunk loop: one jit dispatch per 10-tick
+    chunk, summaries merged host-side.  Kept as the reference ("Python")
+    path.
+  * ``rollout_scan(n)`` — all chunks scanned in ONE jit dispatch
+    (``state.rollout_chunks``) with the identical per-chunk key stream and
+    the identical host-side merge, so results match the legacy path
+    bit-for-bit while eliminating the per-chunk Python dispatch overhead.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import metric
 from repro.cluster import workloads as W
+from repro.cluster import state as cstate
+from repro.cluster.state import (  # re-exported: the historical home
+    CHUNK,
+    GAMMA_SHAPE,
+    OS_BASE_CORES,
+    RHO_EPS,
+    RUNQLAT_BASE,
+    RUNQLAT_SCALE,
+    S_OFF,
+    S_ON,
+    SAMPLES_PER_TICK,
+    TICKS_PER_DAY,
+    ClusterState,
+    _season,
+    delay_curve,
+)
 from repro.cluster.workloads import Pod
 
-S_ON = 8    # online slots per node
-S_OFF = 6   # offline slots per node
-SAMPLES_PER_TICK = 16
-TICKS_PER_DAY = 2880.0
-
-# contention model constants
-OS_BASE_CORES = 0.5
-RUNQLAT_BASE = 3.0          # latency units under no contention
-RUNQLAT_SCALE = 55.0        # scale of the delay curve
-RHO_EPS = 0.05
-GAMMA_SHAPE = 2.0
+__all__ = [
+    "Cluster", "ClusterState", "NodeSpec", "S_ON", "S_OFF",
+    "SAMPLES_PER_TICK", "TICKS_PER_DAY", "OS_BASE_CORES", "RUNQLAT_BASE",
+    "RUNQLAT_SCALE", "RHO_EPS", "GAMMA_SHAPE", "delay_curve",
+]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class NodeSpec:
+    """Per-node capacity. Frozen: Cluster.__init__ historically used a
+    shared ``NodeSpec()`` default instance, so a caller mutating one
+    cluster's spec would silently retune every later cluster."""
     cores: float = 32.0
     mem_gb: float = 64.0
 
 
-def _season(t, phase):
-    return 1.0 + 0.35 * jnp.sin(2 * jnp.pi * t / TICKS_PER_DAY + phase) \
-               + 0.12 * jnp.sin(4 * jnp.pi * t / TICKS_PER_DAY + 1.7 * phase)
-
-
-def delay_curve(rho, xp=jnp):
-    """M/G/1-PS style delay vs run-queue pressure: convex, explodes near 1.
-
-    The single source of truth for the contention curve — the rollout
-    kernel applies it per tick (xp=jnp, under jit) and the mitigation
-    policy reuses it host-side (xp=np) to estimate action relief, so
-    retuning the curve retunes both.
-    """
-    return RUNQLAT_BASE + RUNQLAT_SCALE * rho**2 / xp.maximum(1.0 - rho, RHO_EPS)
-
-
-@partial(jax.jit, static_argnames=("num_ticks",))
-def _rollout(state, profiles, t0, key, num_ticks: int):
-    """Scan num_ticks ticks. Returns (new_state, accumulated telemetry)."""
-
-    def tick(carry, inp):
-        st, _ = carry
-        t, key = inp
-        k_qps, k_lat, k_rt, k_hw = jax.random.split(key, 4)
-
-        on_active = st["on_active"]          # (N, S_ON) bool
-        on_type = st["on_type"]              # (N, S_ON) int32
-        on_qps_mean = st["on_qps_mean"]      # (N, S_ON)
-        on_phase = st["on_phase"]
-
-        qps_noise = 1.0 + 0.06 * jax.random.normal(k_qps, on_qps_mean.shape)
-        qps_t = on_qps_mean * _season(t, on_phase) * qps_noise
-        qps_t = jnp.where(on_active, jnp.maximum(qps_t, 0.0), 0.0)
-
-        cpu_on = jnp.where(
-            on_active,
-            profiles["cpu_per_qps"][on_type] * qps_t + profiles["cpu_base"][on_type],
-            0.0,
-        )
-        thr_on = jnp.where(on_active, profiles["threads_per_qps"][on_type] * qps_t, 0.0)
-        mem_on = jnp.where(
-            on_active,
-            profiles["mem_per_qps"][on_type] * qps_t + profiles["mem_base"][on_type],
-            0.0,
-        )
-
-        off_active = st["off_active"]        # (N, S_OFF)
-        cpu_off = jnp.where(off_active, st["off_cores"], 0.0)
-        thr_off = jnp.where(off_active, st["off_threads"], 0.0)
-        mem_off = jnp.where(off_active, st["off_mem"], 0.0)
-        burst_off = jnp.where(off_active, st["off_burst"], 0.0)
-
-        cores = st["cpu_sum"]                # (N,)
-        # measured CPU demand uses *average* usage; run-queue pressure uses
-        # *peak* (bursty) usage -- this information loss is exactly why
-        # utilization under-predicts interference (paper Section II).
-        total_cpu = cpu_on.sum(-1) + cpu_off.sum(-1) + OS_BASE_CORES
-        pressure_cpu = cpu_on.sum(-1) + (cpu_off * burst_off).sum(-1) + OS_BASE_CORES
-        rho = total_cpu / cores
-        rho_p = pressure_cpu / cores
-        threads_total = thr_on.sum(-1) + thr_off.sum(-1) + 2.0
-
-        # M/G/1-PS style delay curve: convex in rho, explodes near 1.0.
-        delay = delay_curve(rho_p)
-        # thread-count pressure adds a second contention path
-        delay = delay * (1.0 + 0.15 * jnp.maximum(threads_total / cores - 1.0, 0.0))
-        # tick-level lognormal jitter (scheduling is noisy)
-        delay = delay * jnp.exp(
-            0.13 * jax.random.normal(jax.random.fold_in(k_lat, 99), delay.shape)
-        )
-        delay = jnp.clip(delay, 0.0, 2.5 * metric.OVERFLOW_EDGE)
-
-        # per-pod runqlat samples (gamma, mean == node delay x pod jitter)
-        def pod_samples(key, active, n_slots):
-            jit_ = 1.0 + 0.18 * jax.random.normal(
-                jax.random.fold_in(key, 0), active.shape
-            )
-            mean = delay[:, None] * jnp.maximum(jit_, 0.3)
-            g = jax.random.gamma(
-                jax.random.fold_in(key, 1), GAMMA_SHAPE,
-                shape=(*active.shape, SAMPLES_PER_TICK),
-            )
-            samples = g * (mean[..., None] / GAMMA_SHAPE)
-            w = jnp.broadcast_to(active[..., None], samples.shape).astype(jnp.float32)
-            return samples, w, mean
-
-        s_on, w_on, mean_on = pod_samples(jax.random.fold_in(k_lat, 0), on_active, S_ON)
-        s_off, w_off, _ = pod_samples(jax.random.fold_in(k_lat, 1), off_active, S_OFF)
-        hist_on = metric.histogram(s_on, w_on)     # (N, S_ON, 200)
-        hist_off = metric.histogram(s_off, w_off)  # (N, S_OFF, 200)
-
-        # node-level measured telemetry
-        cpu_util = jnp.minimum(total_cpu, cores) / cores
-        mem_used = mem_on.sum(-1) + mem_off.sum(-1) + 2.0
-        mem_util = jnp.minimum(mem_used, st["mem_sum"]) / st["mem_sum"]
-        n_pods = on_active.sum(-1) + off_active.sum(-1)
-
-        # online response time: service term + queueing-delay term + a
-        # cache-contention term the runqlat metric does not capture
-        base_rt = profiles["base_rt"][on_type]
-        sat = jnp.maximum(qps_t / profiles["qps_cap"][on_type] - 0.8, 0.0)
-        cache_term = 0.06 * base_rt * jnp.minimum(mem_used / st["mem_sum"], 1.2)[:, None]
-        rt = base_rt * (1.0 + 1.5 * sat) \
-            + profiles["rt_per_runqlat"][on_type] * mean_on \
-            + cache_term \
-            + 0.06 * base_rt * jax.random.normal(k_rt, on_active.shape)
-        rt = jnp.where(on_active, jnp.maximum(rt, 0.5), 0.0)
-
-        # hardware events (per Table III), load-dependent with noise
-        hw_noise = 1.0 + 0.05 * jax.random.normal(k_hw, (cores.shape[0], 8))
-        used = jnp.minimum(total_cpu, cores)
-        instructions = used * 2.4e9
-        cache_pressure = jnp.minimum(mem_used / st["mem_sum"], 1.2) + 0.04 * n_pods
-        ipc = jnp.maximum(2.2 - 0.7 * jnp.minimum(rho, 1.3) - 0.3 * cache_pressure, 0.4)
-        cycles = instructions / ipc
-        cache_refs = instructions * 0.30
-        cache_misses = cache_refs * (0.02 + 0.08 * cache_pressure)
-        branch_ins = instructions * 0.18
-        branch_miss = branch_ins * (0.01 + 0.02 * jnp.minimum(rho, 1.5))
-        ctx_sw = threads_total * 120.0 * (1.0 + jnp.maximum(rho - 0.7, 0.0) * 3.0)
-        migrations = ctx_sw * 0.02
-        hw = jnp.stack(
-            [cycles, instructions, cache_refs, cache_misses,
-             branch_ins, branch_miss, ctx_sw, migrations], axis=-1
-        ) * hw_noise
-
-        # perf metrics (12 cols, Table III order)
-        qps_node = qps_t.sum(-1)
-        perf = jnp.stack(
-            [
-                cpu_util,
-                mem_util,
-                0.25 * mem_used,                     # mem_cache
-                1500.0 * total_cpu,                  # mem_pgfault
-                3.0 * mem_off.sum(-1),               # mem_pgmajfault
-                0.8 * mem_used,                      # working_set
-                0.7 * mem_used,                      # memory_rss
-                0.002 * qps_node,                    # net_recv_avg (MB/s)
-                1.2 * qps_node,                      # net_recv_packets_avg
-                0.008 * qps_node,                    # net_send_avg
-                1.1 * qps_node,                      # net_send_packets_avg
-                0.5 * cpu_off.sum(-1),               # disk_io_avg
-            ],
-            axis=-1,
-        )
-
-        out = {
-            "hist_on": hist_on,
-            "hist_off": hist_off,
-            "rt": rt,
-            "qps": qps_t,
-            "cpu_util": cpu_util,
-            "mem_util": mem_util,
-            "mem_used": mem_used,
-            "cpu_demand": total_cpu,
-            "hw": hw,
-            "perf": perf,
-            "delay": delay,
-            "mean_on": mean_on,
-        }
-
-        # age offline jobs
-        new_rem = jnp.where(off_active, st["off_remaining"] - 1, st["off_remaining"])
-        st = dict(st)
-        st["off_remaining"] = new_rem
-        st["off_active"] = off_active & (new_rem > 0)
-        return (st, None), out
-
-    keys = jax.random.split(key, num_ticks)
-    ts = t0 + jnp.arange(num_ticks, dtype=jnp.float32)
-    (state, _), outs = jax.lax.scan(tick, (state, None), (ts, keys))
-
-    summary = {
-        "hist_on": outs["hist_on"].sum(0),          # (N, S_ON, 200)
-        "hist_off": outs["hist_off"].sum(0),        # (N, S_OFF, 200)
-        "rt": outs["rt"],                           # (W, N, S_ON)
-        "qps": outs["qps"].mean(0),                 # (N, S_ON)
-        "cpu_util": outs["cpu_util"].mean(0),       # (N,)
-        "mem_util": outs["mem_util"].mean(0),
-        "mem_used": outs["mem_used"].mean(0),
-        "cpu_demand": outs["cpu_demand"].mean(0),
-        "hw": outs["hw"].mean(0),                   # (N, 8)
-        "perf": outs["perf"].mean(0),               # (N, 12)
-        "delay": outs["delay"].mean(0),             # (N,)
-        "mean_on": outs["mean_on"].mean(0),         # (N, S_ON)
-        "cpu_util_series": outs["cpu_util"],        # (W, N)
-        "mem_util_series": outs["mem_util"],
-    }
-    return state, summary
+# legacy alias: the jit'd window kernel used to be defined here
+_rollout = cstate.rollout_window
 
 
 class Cluster:
-    """Host-side cluster manager wrapping the jit'd rollout."""
+    """Host-side cluster manager: a thin stateful shell over ClusterState."""
 
-    def __init__(self, num_nodes: int = 12, spec: NodeSpec = NodeSpec(), seed: int = 0):
+    CHUNK = CHUNK  # fixed scan length -> exactly one XLA compilation
+
+    def __init__(self, num_nodes: int = 12, spec: NodeSpec | None = None,
+                 seed: int = 0):
+        spec = NodeSpec() if spec is None else spec
         self.n = num_nodes
         self.spec = spec
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
         self.t = 0.0
         self.profiles = {k: jnp.asarray(v) for k, v in W.online_arrays().items()}
-        self.state = {
-            "on_active": jnp.zeros((num_nodes, S_ON), bool),
-            "on_type": jnp.zeros((num_nodes, S_ON), jnp.int32),
-            "on_qps_mean": jnp.zeros((num_nodes, S_ON), jnp.float32),
-            "on_phase": jnp.zeros((num_nodes, S_ON), jnp.float32),
-            "off_active": jnp.zeros((num_nodes, S_OFF), bool),
-            "off_cores": jnp.zeros((num_nodes, S_OFF), jnp.float32),
-            "off_threads": jnp.zeros((num_nodes, S_OFF), jnp.float32),
-            "off_mem": jnp.zeros((num_nodes, S_OFF), jnp.float32),
-            "off_burst": jnp.ones((num_nodes, S_OFF), jnp.float32),
-            "off_remaining": jnp.zeros((num_nodes, S_OFF), jnp.int32),
-            "cpu_sum": jnp.full((num_nodes,), spec.cores, jnp.float32),
-            "mem_sum": jnp.full((num_nodes,), spec.mem_gb, jnp.float32),
-        }
+        self.state = ClusterState.create(num_nodes, spec.cores, spec.mem_gb)
         self.last: dict | None = None
         self._pod_slots: dict[int, tuple[str, int, int]] = {}  # uid -> (kind, node, slot)
         self._uid = 0
+        # replayable mutation events: (op, t, node, slot, *params) host
+        # tuples consumed by state.extract_plan for batched replay
+        self.log: list[tuple] = []
 
     # ---------------- placement ----------------
-
-    def _set(self, name, idx, value):
-        self.state[name] = self.state[name].at[idx].set(value)
 
     def place(self, pod: Pod, node: int) -> bool:
         """Place a pod on a node. Returns False if the node has no free slot."""
         if node < 0 or node >= self.n:
             return False
         if pod.is_online:
-            free = np.nonzero(~np.asarray(self.state["on_active"][node]))[0]
+            free = np.nonzero(~np.asarray(self.state.on_active[node]))[0]
             if free.size == 0:
                 return False
             s = int(free[0])
             prof = W.ONLINE_PROFILES[pod.workload]
-            self._set("on_active", (node, s), True)
-            self._set("on_type", (node, s), prof.type_id)
-            self._set("on_qps_mean", (node, s), float(pod.qps))
-            self._set("on_phase", (node, s), float(self.rng.uniform(0, 2 * np.pi)))
+            phase = float(self.rng.uniform(0, 2 * np.pi))
+            self.state = cstate.place_online(
+                self.state, node, s, prof.type_id, float(pod.qps), phase)
+            self.log.append(("place_on", self.t, node, s,
+                             prof.type_id, float(pod.qps), phase))
             kind = "on"
         else:
-            free = np.nonzero(~np.asarray(self.state["off_active"][node]))[0]
+            free = np.nonzero(~np.asarray(self.state.off_active[node]))[0]
             if free.size == 0:
                 return False
             s = int(free[0])
             prof = W.OFFLINE_PROFILES[pod.workload]
-            cores = pod.cpu_demand
-            self._set("off_active", (node, s), True)
-            self._set("off_cores", (node, s), float(cores))
-            self._set("off_threads", (node, s), float(cores * prof.threads_per_core))
-            self._set("off_mem", (node, s), float(cores * prof.mem_per_core))
-            self._set("off_burst", (node, s), float(self.rng.uniform(*prof.burst_range)))
-            self._set("off_remaining", (node, s), int(pod.duration))
+            cores = float(pod.cpu_demand)
+            threads = float(cores * prof.threads_per_core)
+            mem = float(cores * prof.mem_per_core)
+            burst = float(self.rng.uniform(*prof.burst_range))
+            remaining = int(pod.duration)
+            self.state = cstate.place_offline(
+                self.state, node, s, cores, threads, mem, burst, remaining)
+            self.log.append(("place_off", self.t, node, s,
+                             cores, threads, mem, burst, remaining))
             kind = "off"
         pod.uid = self._uid
         self._pod_slots[pod.uid] = (kind, node, s)
@@ -313,16 +149,11 @@ class Cluster:
                 f"finished offline job cleared by reconcile()"
             )
         kind, node, s = self._pod_slots.pop(uid)
-        self._set(f"{kind}_active", (node, s), False)
-        if kind == "off":
-            self._clear_off_slot(node, s)
-
-    _OFF_FIELDS = ("off_cores", "off_threads", "off_mem", "off_remaining")
-
-    def _clear_off_slot(self, node: int, s: int) -> None:
-        for name in self._OFF_FIELDS:
-            self._set(name, (node, s), 0)
-        self._set("off_burst", (node, s), 1.0)
+        if kind == "on":
+            self.state = cstate.evict_online(self.state, node, s)
+        else:
+            self.state = cstate.evict_offline(self.state, node, s)
+        self.log.append((f"evict_{kind}", self.t, node, s))
 
     def reconcile(self) -> list[int]:
         """Clear offline jobs whose run finished (off_remaining hit 0).
@@ -331,21 +162,22 @@ class Cluster:
         host-side ``_pod_slots`` map, so without this the map leaks and stale
         off_cores/off_mem persist in state (harmless to the sim, which masks
         by off_active, but wrong for any code reading raw state).  Returns
-        the uids of the jobs that were cleared.
+        the uids of the jobs that were cleared.  Not logged: the replay path
+        needs no reconcile events, because its dynamics mask by off_active
+        and placements overwrite every slot field.
         """
-        off_active = np.asarray(self.state["off_active"])
+        off_active = np.asarray(self.state.off_active)
         finished = [
             uid for uid, (kind, node, s) in self._pod_slots.items()
             if kind == "off" and not off_active[node, s]
         ]
         for uid in finished:
-            _, node, s = self._pod_slots.pop(uid)
-            self._clear_off_slot(node, s)
+            self._pod_slots.pop(uid)
+        if finished:
+            self.state, _ = cstate.reconcile(self.state)
         return finished
 
     # ---------------- runtime mitigation primitives ----------------
-
-    _ON_FIELDS = ("on_type", "on_qps_mean", "on_phase")
 
     def migrate(self, uid: int, dst: int) -> bool:
         """Move a live pod to another node, preserving its parameters.
@@ -361,21 +193,14 @@ class Cluster:
             return False
         if dst == src:
             return True
-        active = np.asarray(self.state[f"{kind}_active"][dst])
+        active = np.asarray(getattr(self.state, f"{kind}_active")[dst])
         free = np.nonzero(~active)[0]
         if free.size == 0:
             return False
         d = int(free[0])
-        fields = self._ON_FIELDS if kind == "on" else self._OFF_FIELDS + ("off_burst",)
-        for name in fields:
-            self._set(name, (dst, d), self.state[name][src, s])
-        self._set(f"{kind}_active", (dst, d), True)
-        self._set(f"{kind}_active", (src, s), False)
-        if kind == "off":
-            self._clear_off_slot(src, s)
-        else:
-            for name in self._ON_FIELDS:
-                self._set(name, (src, s), 0)
+        mover = cstate.migrate_online if kind == "on" else cstate.migrate_offline
+        self.state = mover(self.state, src, s, dst, d)
+        self.log.append((f"migrate_{kind}", self.t, src, s, dst, d))
         self._pod_slots[uid] = (kind, dst, d)
         return True
 
@@ -396,18 +221,24 @@ class Cluster:
         if kind == "off":
             if cores is None or cores <= 0:
                 return False
-            old = float(self.state["off_cores"][node, s])
+            old = float(self.state.off_cores[node, s])
             if old <= 0:
                 return False
             ratio = cores / old
-            for name in ("off_cores", "off_threads", "off_mem"):
-                self._set(name, (node, s), float(self.state[name][node, s]) * ratio)
-            rem = int(self.state["off_remaining"][node, s])
-            self._set("off_remaining", (node, s), max(int(round(rem / ratio)), 1))
+            new_threads = float(self.state.off_threads[node, s]) * ratio
+            new_mem = float(self.state.off_mem[node, s]) * ratio
+            rem = int(self.state.off_remaining[node, s])
+            new_rem = max(int(round(rem / ratio)), 1)
+            self.state = cstate.resize_offline(
+                self.state, node, s, old * ratio, new_threads, new_mem,
+                new_rem)
+            self.log.append(("resize_off", self.t, node, s,
+                             old * ratio, new_threads, new_mem, 0.0, new_rem))
         else:
             if qps is None or qps < 0:
                 return False
-            self._set("on_qps_mean", (node, s), float(qps))
+            self.state = cstate.resize_online(self.state, node, s, float(qps))
+            self.log.append(("resize_on", self.t, node, s, float(qps)))
         return True
 
     def pods_on_node(self, node: int) -> list[dict]:
@@ -418,25 +249,25 @@ class Cluster:
             if n_ != node:
                 continue
             if kind == "on":
-                type_id = int(self.state["on_type"][node, s])
+                type_id = int(self.state.on_type[node, s])
                 out.append({
                     "uid": uid, "kind": "on", "slot": s,
                     "workload": W.ONLINE_BY_TYPE[type_id],
-                    "qps": float(self.state["on_qps_mean"][node, s]),
+                    "qps": float(self.state.on_qps_mean[node, s]),
                 })
             else:
                 out.append({
                     "uid": uid, "kind": "off", "slot": s,
-                    "cores": float(self.state["off_cores"][node, s]),
-                    "burst": float(self.state["off_burst"][node, s]),
-                    "remaining": int(self.state["off_remaining"][node, s]),
+                    "cores": float(self.state.off_cores[node, s]),
+                    "burst": float(self.state.off_burst[node, s]),
+                    "remaining": int(self.state.off_remaining[node, s]),
                 })
         return out
 
     def active_pod_count(self) -> int:
         """Number of active slots across the cluster (invariant checks)."""
-        return int(np.asarray(self.state["on_active"]).sum()
-                   + np.asarray(self.state["off_active"]).sum())
+        return int(np.asarray(self.state.on_active).sum()
+                   + np.asarray(self.state.off_active).sum())
 
     def slot_uids(self) -> np.ndarray:
         """(N, S_ON + S_OFF) tenant uid per slot, -1 when vacant.
@@ -454,32 +285,39 @@ class Cluster:
 
     # ---------------- simulation ----------------
 
-    CHUNK = 10  # fixed scan length -> exactly one XLA compilation
-
     def rollout(self, num_ticks: int) -> dict:
-        """Advance ~num_ticks ticks (rounded up to CHUNK multiples)."""
+        """Advance ~num_ticks ticks (rounded up to CHUNK multiples) through
+        the legacy chunk loop: one jit dispatch per chunk."""
         chunks = max(1, -(-num_ticks // self.CHUNK))
         parts = []
         for _ in range(chunks):
             self.key, k = jax.random.split(self.key)
-            self.state, summary = _rollout(
+            self.state, summary = cstate.rollout_window(
                 self.state, self.profiles, jnp.float32(self.t), k, self.CHUNK
             )
             self.t += self.CHUNK
             parts.append(summary)
-        if len(parts) == 1:
-            merged = parts[0]
-        else:
-            merged = {}
-            for key in parts[0]:
-                vals = [p[key] for p in parts]
-                if key in ("hist_on", "hist_off"):
-                    merged[key] = sum(vals[1:], vals[0])
-                elif key in ("rt", "cpu_util_series", "mem_util_series"):
-                    merged[key] = jnp.concatenate(vals, axis=0)
-                else:
-                    merged[key] = sum(vals[1:], vals[0]) / len(vals)
-        self.last = jax.tree.map(np.asarray, merged)
+        self.last = jax.tree.map(np.asarray, cstate.merge_summaries(parts))
+        self.reconcile()
+        return self.last
+
+    def rollout_scan(self, num_ticks: int) -> dict:
+        """``rollout`` with every chunk scanned in ONE jit dispatch.
+
+        Consumes the identical per-chunk key stream (iterative splits of
+        ``self.key``) and merges the stacked per-chunk summaries with the
+        identical host-side reduction, so placements, telemetry, and the
+        advanced key match the legacy chunk loop bit-for-bit.
+        """
+        chunks = max(1, -(-num_ticks // self.CHUNK))
+        self.key, ks = cstate.chunk_key_stream(self.key, chunks)
+        self.state, stacked = cstate.rollout_chunks(
+            self.state, self.profiles, jnp.float32(self.t), ks)
+        self.t += chunks * self.CHUNK
+        stacked = jax.tree.map(np.asarray, stacked)
+        parts = [jax.tree.map(lambda a, i=i: a[i], stacked)
+                 for i in range(chunks)]
+        self.last = cstate.merge_summaries(parts)
         self.reconcile()
         return self.last
 
@@ -487,7 +325,9 @@ class Cluster:
 
     def view(self) -> "ClusterView":
         """Typed collector snapshot consumed by every scheduler and the
-        control plane (paper Sec. IV-A) — see ``repro.cluster.view``."""
+        control plane (paper Sec. IV-A) — built straight from the
+        ``ClusterState`` pytree + the last window's telemetry; see
+        ``repro.cluster.view``."""
         if self.last is None:
             self.rollout(30)
         from repro.core.predictors.features import runqlat_summary
@@ -497,20 +337,20 @@ class Cluster:
         node_hist = s["hist_on"].sum(1) + s["hist_off"].sum(1)  # (N, 200)
         summaries = np.stack([runqlat_summary(h) for h in node_hist])
         features = np.concatenate([s["perf"], s["hw"], summaries], axis=1)
-        on_active = np.asarray(self.state["on_active"])
+        on_active = np.asarray(self.state.on_active)
         # per-slot histograms in detector layout: online slots [0, S_ON),
         # offline slots [S_ON, S_ON + S_OFF) — per-pod attribution keys on it
         slot_hists = np.concatenate([s["hist_on"], s["hist_off"]], axis=1)
-        off_active = np.asarray(self.state["off_active"])
-        off_pressure = (np.asarray(self.state["off_cores"])
-                        * np.asarray(self.state["off_burst"])
+        off_active = np.asarray(self.state.off_active)
+        off_pressure = (np.asarray(self.state.off_cores)
+                        * np.asarray(self.state.off_burst)
                         * off_active).sum(-1)
         return ClusterView(
             t=float(self.t),
             cpu_cur=s["cpu_demand"],
-            cpu_sum=np.asarray(self.state["cpu_sum"]),
+            cpu_sum=np.asarray(self.state.cpu_sum),
             mem_cur=s["mem_used"],
-            mem_sum=np.asarray(self.state["mem_sum"]),
+            mem_sum=np.asarray(self.state.mem_sum),
             online_hists=s["hist_on"],
             offline_hists=s["hist_off"],
             slot_hists=slot_hists,
@@ -518,7 +358,7 @@ class Cluster:
             online_qps=s["qps"],             # (N, S_ON) window-mean per slot
             online_qps_sum=(s["qps"] * on_active).sum(-1),
             on_active=on_active,
-            on_type=np.asarray(self.state["on_type"]),
+            on_type=np.asarray(self.state.on_type),
             off_pressure=off_pressure,       # burst-weighted offline cores
             cpu_util=s["cpu_util"],
             mem_util=s["mem_util"],
@@ -528,7 +368,7 @@ class Cluster:
     def online_rt_samples(self) -> np.ndarray:
         """Flat response-time samples of all active online pods, last window."""
         s = self.last
-        active = np.asarray(self.state["on_active"])  # (N, S_ON)
+        active = np.asarray(self.state.on_active)  # (N, S_ON)
         rt = s["rt"]  # (W, N, S_ON)
         mask = np.broadcast_to(active, rt.shape)
         return rt[mask & (rt > 0)]

@@ -17,6 +17,11 @@ the shared seasonal projection expects ``horizon`` telemetry windows ahead.
 They default to ``None`` — a view without an attached forecast service is
 simply a present-time snapshot, and forecast-aware consumers (the ICO-F
 scheduler) degrade exactly to their present-time behaviour.
+
+Views are built host-side from the ``ClusterState`` pytree
+(``repro.cluster.state``): the batched/scanned rollout core never
+materialises a ClusterView — it carries the raw arrays — and the shell
+converts to this dataclass only at scheduler/control-plane decision points.
 """
 from __future__ import annotations
 

@@ -86,20 +86,18 @@ class DetectorConfig:
                                        # slot 0 arbitrarily
 
 
-@jax.jit
-def _detector_update(hist, mu, cusum, f_cusum, slot_hist, slot_prev,
-                     slot_score, steps, slot_hists, forecast_avg, decay,
-                     alpha, slack, drift_thr, pro_thr, q, abs_thr, warmup):
-    """One detector step for all nodes and slots at once.
+def node_track_step(hist, mu, cusum, steps, node_hists, decay, alpha, slack,
+                    drift_thr, q, abs_thr, warmup):
+    """Pure node-track CUSUM step: decay the histogram, move the EWMA
+    baseline, accumulate drift, trip/consume the flags.
 
-    hist (N, 200), mu (N,), cusum/f_cusum (N,), slot_hist (N, S, 200),
-    slot_prev/slot_score (N, S), steps () int32; slot_hists (N, S, 200)
-    fresh per-slot counts from the last telemetry window; forecast_avg (N,)
-    projected node runqlat (a large negative sentinel when no forecast is
-    available, so f_cusum stays pinned at zero).  Returns the new state
-    plus the hotspot/proactive masks and a diagnostics dict.
+    Shared by ``_detector_update`` (the host loop's jit'd call) and the
+    scanned rollout core (``repro.cluster.state.scan_windows`` folds this
+    into its window carry) — one definition, so the in-scan detector is the
+    same math as the interactive one.  Returns
+    (hist, avg, p_tail, mu, cusum_after_reset, cusum_trip, drift_trip,
+    acute_trip, raw_hot, hot); the caller owns the ``steps`` increment.
     """
-    node_hists = slot_hists.sum(1)
     hist = hist * decay + node_hists
     avg = metric.avg_runqlat(hist)
     p_tail = metric.percentile(hist, q)
@@ -114,6 +112,36 @@ def _detector_update(hist, mu, cusum, f_cusum, slot_hist, slot_prev,
     raw_hot = drift_trip | acute_trip
     hot = raw_hot & (steps >= warmup)
 
+    # hysteresis: a flag consumes the accumulated drift, so a node must
+    # re-accumulate before flagging again (the acute p_tail path still
+    # refires).  The reset keys on the RAW flag: suppressing only the mask
+    # during warmup would leave the warmup transient's drift in cusum and
+    # fire a spurious flag at exactly steps == warmup.
+    cusum_trip = cusum
+    cusum = jnp.where(raw_hot, 0.0, cusum)
+    return (hist, avg, p_tail, mu, cusum, cusum_trip, drift_trip, acute_trip,
+            raw_hot, hot)
+
+
+@jax.jit
+def _detector_update(hist, mu, cusum, f_cusum, slot_hist, slot_prev,
+                     slot_score, steps, slot_hists, forecast_avg, decay,
+                     alpha, slack, drift_thr, pro_thr, q, abs_thr, warmup):
+    """One detector step for all nodes and slots at once.
+
+    hist (N, 200), mu (N,), cusum/f_cusum (N,), slot_hist (N, S, 200),
+    slot_prev/slot_score (N, S), steps () int32; slot_hists (N, S, 200)
+    fresh per-slot counts from the last telemetry window; forecast_avg (N,)
+    projected node runqlat (a large negative sentinel when no forecast is
+    available, so f_cusum stays pinned at zero).  Returns the new state
+    plus the hotspot/proactive masks and a diagnostics dict.
+    """
+    node_hists = slot_hists.sum(1)
+    (hist, avg, p_tail, mu, cusum, cusum_trip, drift_trip, acute_trip,
+     raw_hot, hot) = node_track_step(hist, mu, cusum, steps, node_hists,
+                                     decay, alpha, slack, drift_thr, q,
+                                     abs_thr, warmup)
+
     # forecast channel: CUSUM of the *predicted* exceedance over the same
     # observed baseline.  A reactive flag outranks a proactive one, and
     # either consumes both accumulators (a node just flagged — for real or
@@ -127,16 +155,11 @@ def _detector_update(hist, mu, cusum, f_cusum, slot_hist, slot_prev,
     raw_pro = (f_cusum > pro_thr) & (avg > mu + slack)
     proactive = raw_pro & (steps >= warmup) & ~raw_hot
 
-    # hysteresis: a flag consumes the accumulated drift, so a node must
-    # re-accumulate before flagging again (the acute p_tail path still
-    # refires).  The reset keys on the RAW flag: suppressing only the mask
-    # during warmup would leave the warmup transient's drift in cusum and
-    # fire a spurious flag at exactly steps == warmup.  The ControlLoop
+    # node_track_step already consumed the drift CUSUM on the raw flag; the
+    # forecast accumulator is consumed here on either flag (the ControlLoop
     # keeps un-acted flags pending across an interval skip so incidents
-    # aren't lost to acting cadence.
-    cusum_trip = cusum      # pre-consumption values: what the flag tripped
-    f_cusum_trip = f_cusum  # on, before the reset below zeroes them
-    cusum = jnp.where(raw_hot, 0.0, cusum)
+    # aren't lost to acting cadence)
+    f_cusum_trip = f_cusum  # pre-consumption value: what the flag tripped on
     f_cusum = jnp.where(raw_hot | raw_pro, 0.0, f_cusum)
 
     # slot track: decayed per-slot histogram + recency-weighted positive

@@ -114,6 +114,10 @@ def _forecast_update(A, b, err, count, t, y, active, decay, ridge, alpha,
     A (N, S, F, F), b (N, S, F), err/count (N, S); y (N, S) window-mean QPS,
     active (N, S) bool.  Returns the new state plus the one-step prediction
     the *old* fit made for this window (the calibration signal).
+
+    Also reused verbatim inside the scanned rollout core
+    (``repro.cluster.state.scan_windows`` folds it into the window carry),
+    so the in-scan forecaster moments are the same math as this host loop's.
     """
     x = _features(t)                                   # (F,)
     pred = jnp.maximum((_solve(A, b, ridge) * x).sum(-1), 0.0)

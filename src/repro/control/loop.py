@@ -532,10 +532,13 @@ class ControlLoop:
         k = k or cluster.CHUNK
         done = 0
         rec = self._recorder
+        # the scanned single-dispatch path when the cluster provides it
+        # (bit-identical to the chunk loop); plain rollout otherwise
+        roll = getattr(cluster, "rollout_scan", cluster.rollout)
         while done < num_ticks:
             t0 = cluster.t
             with self.timers.phase("rollout"):
-                cluster.rollout(min(k, num_ticks - done))
+                roll(min(k, num_ticks - done))
             progress = int(cluster.t - t0)
             if progress <= 0:
                 raise RuntimeError(

@@ -262,7 +262,7 @@ class MitigationPolicy:
             prof = ONLINE_PROFILES[victim["workload"]]
             cpu_pod = prof.cpu_per_qps * victim["qps"] + prof.cpu_base
             mem_pod = prof.mem_per_qps * victim["qps"] + prof.mem_base
-            on_free = ~np.asarray(cluster.state["on_active"]).all(axis=1)
+            on_free = ~np.asarray(cluster.state.on_active).all(axis=1)
             # Eq.(3) prediction on every node at once: latency units
             pred = np.asarray(
                 self.q.intf_pod(victim["qps"], view.features)
