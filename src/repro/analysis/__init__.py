@@ -1,0 +1,12 @@
+"""repro-lint: stdlib-only static analysis enforcing this repo's
+load-bearing invariants (jit purity, pytree hygiene, zero-overhead
+tracing, import layering, PRNG discipline).
+
+Run as ``python -m repro.analysis.lint src benchmarks examples``.
+Rule tables live in :mod:`repro.analysis.layers`; rule implementations
+in :mod:`repro.analysis.rules`.
+"""
+from repro.analysis.engine import (Finding, LintReport, SourceFile,
+                                   lint_files, run_lint)
+
+__all__ = ["Finding", "LintReport", "SourceFile", "lint_files", "run_lint"]

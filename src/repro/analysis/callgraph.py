@@ -1,0 +1,178 @@
+"""Cheap call-graph closure from jit roots, for the R1 purity check.
+
+This is not a general call graph — it is exactly the closure R1 needs:
+
+* **Roots** are functions in the configured ``JIT_ROOT_MODULES`` that
+  become traced code: decorated with ``@jax.jit`` (directly or through
+  ``partial``), wrapped in a module-level ``jax.jit(...)`` /
+  ``jax.vmap(...)`` call, or passed to a ``lax.scan`` / ``lax.switch`` /
+  ``lax.cond``-style combinator.
+
+* **Edges** resolve by name only: a bare call ``f(...)`` binds to a
+  top-level function of the same module or to a function imported via
+  ``from m import f`` (module- or function-level — the scan core imports
+  its detector fold inside the function body); an attribute call
+  ``m.f(...)`` binds through a module alias (``from repro.core import
+  metric`` -> ``metric.histogram``).  Anything unresolved (jnp/lax/self
+  methods, locals) is simply not followed.
+
+Nested ``def``s and lambdas inside a reachable function are part of its
+body and are checked with it, which is how scan bodies and switch
+branches get covered without tracking closures.
+"""
+from __future__ import annotations
+
+import ast
+from collections import deque
+
+from repro.analysis import layers
+from repro.analysis.engine import SourceFile, dotted_name
+
+
+def _is_jit_wrapper(name: str | None) -> bool:
+    return name is not None and (
+        name in layers.JIT_WRAPPERS
+        or any(name.endswith("." + w) for w in ("jit", "vmap", "pmap")))
+
+
+def _takes_traced_callable(name: str | None) -> bool:
+    return name is not None and any(
+        name == t or name.endswith("." + t)
+        for t in layers.TRACED_CALLABLE_TAKERS)
+
+
+class FunctionIndex:
+    """Top-level functions + import aliases for every linted module."""
+
+    def __init__(self, files: list[SourceFile]):
+        self.files = {f.module: f for f in files if f.tree is not None}
+        # (module, func name) -> (SourceFile, FunctionDef)
+        self.functions: dict[tuple[str, str], tuple[SourceFile, ast.AST]] = {}
+        # module -> alias -> ("mod", target_module) | ("func", mod, name)
+        self.aliases: dict[str, dict[str, tuple]] = {}
+        for sf in files:
+            if sf.tree is None:
+                continue
+            for node in sf.tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    self.functions[(sf.module, node.name)] = (sf, node)
+        for sf in files:
+            if sf.tree is not None:
+                self.aliases[sf.module] = self._file_aliases(sf)
+
+    def _file_aliases(self, sf: SourceFile) -> dict[str, tuple]:
+        out: dict[str, tuple] = {}
+        for node in sf.tree.body:
+            self._collect_aliases(node, out)
+        return out
+
+    def _collect_aliases(self, node: ast.AST, out: dict[str, tuple]) -> None:
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    "mod", a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and not node.level \
+                and node.module:
+            for a in node.names:
+                target = f"{node.module}.{a.name}"
+                bound = a.asname or a.name
+                if target in self.files:
+                    out[bound] = ("mod", target)
+                elif (node.module, a.name) in self.functions:
+                    out[bound] = ("func", node.module, a.name)
+
+    def local_aliases(self, fn: ast.AST) -> dict[str, tuple]:
+        """Aliases from import statements inside a function body."""
+        out: dict[str, tuple] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                self._collect_aliases(node, out)
+        return out
+
+    def resolve_call(self, module: str, call: ast.Call,
+                     local: dict[str, tuple]) -> tuple[str, str] | None:
+        """(module, func) this call binds to, if statically resolvable."""
+        func = call.func
+        if isinstance(func, ast.Name):
+            if (module, func.id) in self.functions:
+                return (module, func.id)
+            bind = local.get(func.id) or self.aliases.get(module, {}).get(
+                func.id)
+            if bind and bind[0] == "func":
+                return (bind[1], bind[2])
+            return None
+        if isinstance(func, ast.Attribute) and isinstance(func.value,
+                                                          ast.Name):
+            bind = local.get(func.value.id) or self.aliases.get(
+                module, {}).get(func.value.id)
+            if bind and bind[0] == "mod" \
+                    and (bind[1], func.attr) in self.functions:
+                return (bind[1], func.attr)
+        return None
+
+
+def _root_functions(sf: SourceFile) -> set[str]:
+    """Names of top-level functions in ``sf`` that become traced code."""
+    roots: set[str] = set()
+    top_level = {n.name for n in sf.tree.body
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+    def names_in(node: ast.AST):
+        return (n.id for n in ast.walk(node)
+                if isinstance(n, ast.Name) and n.id in top_level)
+
+    for node in sf.tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                d = dotted_name(dec)
+                if _is_jit_wrapper(d):
+                    roots.add(node.name)
+                elif isinstance(dec, ast.Call):
+                    dc = dotted_name(dec.func)
+                    if _is_jit_wrapper(dc):
+                        roots.add(node.name)
+                    elif dc in ("partial", "functools.partial") and any(
+                            _is_jit_wrapper(dotted_name(a))
+                            for a in dec.args):
+                        roots.add(node.name)
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = dotted_name(node.func)
+        if _is_jit_wrapper(d) or _takes_traced_callable(d):
+            for name in names_in(node):
+                roots.add(name)
+    return roots
+
+
+def reachable_from_jit(index: FunctionIndex,
+                       root_modules=None) -> dict[tuple[str, str], str]:
+    """Closure of functions reachable from the jit roots.
+
+    Returns ``(module, func) -> root description`` for every reachable
+    top-level function across the linted set.
+    """
+    root_modules = root_modules or layers.JIT_ROOT_MODULES
+    work: deque[tuple[str, str]] = deque()
+    origin: dict[tuple[str, str], str] = {}
+    for mod in root_modules:
+        sf = index.files.get(mod)
+        if sf is None:
+            continue
+        for name in sorted(_root_functions(sf)):
+            key = (mod, name)
+            if key in index.functions and key not in origin:
+                origin[key] = f"{mod}.{name}"
+                work.append(key)
+    while work:
+        mod, name = work.popleft()
+        sf, fn = index.functions[(mod, name)]
+        local = index.local_aliases(fn)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            target = index.resolve_call(mod, node, local)
+            if target and target not in origin:
+                origin[target] = origin[(mod, name)]
+                work.append(target)
+    return origin

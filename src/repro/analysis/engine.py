@@ -1,0 +1,264 @@
+"""repro-lint engine: source loading, suppressions, rule running, reports.
+
+The engine is deliberately dumb: it parses every target file once, wires
+up AST parent links, reads ``# repro-lint: disable=...`` comments, and
+hands the whole batch to each rule in ``repro.analysis.rules``.  All
+policy lives in the rules and in the ``repro.analysis.layers`` tables.
+
+Suppression syntax (checked by tests/test_lint.py):
+
+    x = risky()               # repro-lint: disable=R3
+    # repro-lint: disable=R1,R5 -- one-line justification here
+    y = also_risky()
+
+A comment applies to its own line and to the line directly below it (so a
+justification can sit on its own line above a long statement).  A bare
+``disable`` with no rule list silences every rule for that line.  Every
+suppressed finding is still collected and counted — the CLI reports the
+suppression census so a creeping pile of exemptions stays visible.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import os
+import re
+import tokenize
+
+ALL_RULES = "ALL"  # sentinel: a bare `disable` comment with no rule list
+
+_SUPPRESS_RE = re.compile(
+    r"repro-lint:\s*disable(?:=(?P<rules>[A-Za-z][A-Za-z0-9]*"
+    r"(?:\s*,\s*[A-Za-z][A-Za-z0-9]*)*))?")
+
+
+@dataclasses.dataclass
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str          # repo-relative path, for reporting
+    line: int
+    message: str
+    suppressed: bool = False
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line} {self.rule} {self.message}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def parse_suppressions(text: str) -> dict[int, frozenset | str]:
+    """Map line number -> suppressed rule ids (or ALL_RULES) from comments.
+
+    Comments are found with ``tokenize`` so a ``repro-lint:`` inside a
+    string literal never counts.  Files with tokenize-level errors fall
+    back to no suppressions (the parse error is reported separately).
+    """
+    out: dict[int, frozenset | str] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(text).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _SUPPRESS_RE.search(tok.string)
+            if not m:
+                continue
+            rules = m.group("rules")
+            if rules is None:
+                out[tok.start[0]] = ALL_RULES
+            else:
+                ids = frozenset(r.strip() for r in rules.split(",") if r.strip())
+                prev = out.get(tok.start[0])
+                if isinstance(prev, frozenset):
+                    ids = ids | prev
+                if prev != ALL_RULES:
+                    out[tok.start[0]] = ids
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        pass
+    return out
+
+
+class SourceFile:
+    """One parsed target file: AST (with parent links) + suppressions."""
+
+    def __init__(self, path: str, rel: str, module: str, text: str):
+        self.path = path
+        self.rel = rel
+        self.module = module
+        self.text = text
+        self.error: str | None = None
+        try:
+            self.tree: ast.AST | None = ast.parse(text, filename=rel)
+        except SyntaxError as e:
+            self.tree = None
+            self.error = f"syntax error: {e.msg} (line {e.lineno})"
+            self.suppressions: dict = {}
+            return
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                child._pl_parent = node  # type: ignore[attr-defined]
+        self.suppressions = parse_suppressions(text)
+
+    def suppresses(self, rule: str, line: int) -> bool:
+        for ln in (line, line - 1):
+            entry = self.suppressions.get(ln)
+            if entry == ALL_RULES or (isinstance(entry, frozenset)
+                                      and rule in entry):
+                return True
+        return False
+
+
+def parent(node: ast.AST) -> ast.AST | None:
+    return getattr(node, "_pl_parent", None)
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` for a pure Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def module_matches(name: str, prefix: str) -> bool:
+    return name == prefix or name.startswith(prefix + ".")
+
+
+# --------------------------------------------------------------------------
+# file discovery + module naming
+# --------------------------------------------------------------------------
+
+
+def find_repo_root(paths: list[str]) -> str:
+    """Nearest ancestor of the first path that looks like the repo root."""
+    for p in paths:
+        d = os.path.abspath(p if os.path.isdir(p) else os.path.dirname(p))
+        while True:
+            if (os.path.isdir(os.path.join(d, "src", "repro"))
+                    or os.path.isdir(os.path.join(d, ".git"))):
+                return d
+            up = os.path.dirname(d)
+            if up == d:
+                break
+            d = up
+    return os.getcwd()
+
+
+def infer_module(rel: str) -> str:
+    """Dotted module name for a repo-relative path.
+
+    ``src/repro/x/y.py`` -> ``repro.x.y``; anything else (benchmarks,
+    examples, tests) keeps its path as the dotted name so the import graph
+    stays keyed consistently.
+    """
+    parts = rel.replace(os.sep, "/").split("/")
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][:-3]
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def discover_files(paths: list[str], root: str) -> list[SourceFile]:
+    files: list[SourceFile] = []
+    seen: set[str] = set()
+
+    def add(path: str) -> None:
+        path = os.path.abspath(path)
+        if path in seen:
+            return
+        seen.add(path)
+        rel = os.path.relpath(path, root)
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        files.append(SourceFile(path, rel, infer_module(rel), text))
+
+    for p in paths:
+        if os.path.isfile(p):
+            add(p)
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in ("__pycache__", ".git"))
+            for f in sorted(filenames):
+                if f.endswith(".py"):
+                    add(os.path.join(dirpath, f))
+    return files
+
+
+# --------------------------------------------------------------------------
+# running
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LintReport:
+    findings: list[Finding]      # unsuppressed — these fail the build
+    suppressed: list[Finding]    # matched an inline disable comment
+    num_files: int
+    rules_run: list[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def to_dict(self) -> dict:
+        return {
+            "ok": self.ok,
+            "num_files": self.num_files,
+            "rules_run": self.rules_run,
+            "num_findings": len(self.findings),
+            "num_suppressed": len(self.suppressed),
+            "findings": [f.to_dict() for f in self.findings],
+            "suppressed": [f.to_dict() for f in self.suppressed],
+        }
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+
+def lint_files(files: list[SourceFile], rule_ids=None) -> LintReport:
+    """Run the rule set over already-parsed files (the test entry point)."""
+    from repro.analysis.rules import Context, RULES
+
+    ids = list(RULES) if rule_ids is None else list(rule_ids)
+    unknown = [r for r in ids if r not in RULES]
+    if unknown:
+        raise ValueError(f"unknown rule ids: {unknown} (have {list(RULES)})")
+    ctx = Context([f for f in files if f.tree is not None])
+
+    raw: list[Finding] = []
+    for sf in files:
+        if sf.error is not None:
+            raw.append(Finding("PARSE", sf.rel, 1, sf.error))
+    for rid in ids:
+        raw.extend(RULES[rid].check(ctx))
+
+    by_rel = {f.rel: f for f in files}
+    findings, suppressed = [], []
+    for f in sorted(raw, key=lambda f: (f.path, f.line, f.rule, f.message)):
+        sf = by_rel.get(f.path)
+        if (f.rule != "PARSE" and sf is not None
+                and sf.suppresses(f.rule, f.line)):
+            f.suppressed = True
+            suppressed.append(f)
+        else:
+            findings.append(f)
+    return LintReport(findings, suppressed, len(files), ids)
+
+
+def run_lint(paths: list[str], rule_ids=None,
+             root: str | None = None) -> LintReport:
+    """Discover, parse, and lint ``paths`` (files or directory trees)."""
+    root = root or find_repo_root(paths)
+    return lint_files(discover_files(paths, root), rule_ids)

@@ -1,0 +1,109 @@
+"""Top-level import graph over the linted files, with BFS reachability.
+
+Only *top-level* imports build edges: function-level imports are the
+repo's sanctioned idiom for lazy re-exports and deliberate cycle breaks
+(``repro.core.__init__`` pulling in the control API, ``cluster/state.py``
+folding the detector into its scan carry), and the layering contract in
+``repro.analysis.layers`` is written against the eager graph on purpose.
+
+An ``ImportFrom`` records the source module, and additionally each
+imported name that resolves to a *module in the linted set* (so
+``from repro.obs import recorder`` contributes both ``repro.obs`` and
+``repro.obs.recorder`` edges).  External modules (jax, numpy, stdlib) are
+terminal nodes: recorded, never expanded.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from collections import deque
+
+from repro.analysis.engine import SourceFile
+
+
+@dataclasses.dataclass(frozen=True)
+class ImportEdge:
+    src: str      # importing module
+    dst: str      # imported module (may be external)
+    path: str     # repo-relative file of the import statement
+    line: int
+
+
+def top_level_imports(sf: SourceFile,
+                      known: set[str]) -> list[ImportEdge]:
+    """Import edges from the file's module-level statements only."""
+    edges: list[ImportEdge] = []
+    assert sf.tree is not None
+
+    def walk(body) -> None:
+        for node in body:
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    edges.append(ImportEdge(sf.module, alias.name, sf.rel,
+                                            node.lineno))
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:  # relative imports: not used in this repo
+                    continue
+                if node.module is None:
+                    continue
+                edges.append(ImportEdge(sf.module, node.module, sf.rel,
+                                        node.lineno))
+                for alias in node.names:
+                    sub = f"{node.module}.{alias.name}"
+                    if sub in known:
+                        edges.append(ImportEdge(sf.module, sub, sf.rel,
+                                                node.lineno))
+            elif isinstance(node, (ast.If, ast.Try)):
+                # guarded imports (version/try-except fallbacks) are still
+                # eager at import time: count them
+                walk(node.body)
+                for h in getattr(node, "handlers", []):
+                    walk(h.body)
+                walk(node.orelse)
+                walk(getattr(node, "finalbody", []))
+
+    walk(sf.tree.body)
+    return edges
+
+
+class ImportGraph:
+    """Eager import graph keyed by dotted module name."""
+
+    def __init__(self, files: list[SourceFile]):
+        self.known: set[str] = {f.module for f in files}
+        self.edges: dict[str, list[ImportEdge]] = {}
+        for sf in files:
+            if sf.tree is None:
+                continue
+            mine = top_level_imports(sf, self.known)
+            self.edges.setdefault(sf.module, []).extend(mine)
+
+    def direct(self, module: str) -> list[ImportEdge]:
+        return self.edges.get(module, [])
+
+    def reach(self, start: str) -> dict[str, ImportEdge]:
+        """BFS closure over top-level imports, expanding only known
+        (linted) modules.  Returns every reached module mapped to the
+        first edge that reached it (for reporting chains)."""
+        reached: dict[str, ImportEdge] = {}
+        q: deque[str] = deque([start])
+        seen = {start}
+        while q:
+            mod = q.popleft()
+            for e in self.edges.get(mod, []):
+                if e.dst not in reached:
+                    reached[e.dst] = e
+                if e.dst in self.known and e.dst not in seen:
+                    seen.add(e.dst)
+                    q.append(e.dst)
+        return reached
+
+    def chain(self, start: str, target: str,
+              reached: dict[str, ImportEdge]) -> list[str]:
+        """Reconstruct ``start -> ... -> target`` from BFS back-edges."""
+        out = [target]
+        cur = target
+        while cur != start and cur in reached:
+            cur = reached[cur].src
+            out.append(cur)
+        return list(reversed(out))

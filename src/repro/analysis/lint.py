@@ -1,0 +1,65 @@
+"""CLI: ``python -m repro.analysis.lint [paths] [--json out] [--rules ...]``.
+
+Exit status 0 iff there are no unsuppressed findings.  Suppressed
+findings are counted and listed (census) but never fail the run.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.engine import run_lint
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repro-lint: AST invariant checker for this repo "
+                    "(stdlib-only; see repro/analysis/layers.py for the "
+                    "rule tables)")
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files or directories to lint (default: src)")
+    parser.add_argument("--json", metavar="FILE",
+                        help="also write the full report as JSON "
+                             "('-' for stdout)")
+    parser.add_argument("--rules", metavar="R1,R2,...",
+                        help="run only these rule ids")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule table and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        from repro.analysis.rules import RULES
+        for rule in RULES.values():
+            print(f"{rule.id}  {rule.title:24s} {rule.doc}")
+        return 0
+
+    rule_ids = ([r.strip() for r in args.rules.split(",") if r.strip()]
+                if args.rules else None)
+    try:
+        report = run_lint(args.paths, rule_ids=rule_ids)
+    except ValueError as e:
+        print(f"repro-lint: {e}", file=sys.stderr)
+        return 2
+
+    for f in report.findings:
+        print(f.render())
+    if args.json:
+        payload = report.to_json()
+        if args.json == "-":
+            print(payload)
+        else:
+            with open(args.json, "w", encoding="utf-8") as fh:
+                fh.write(payload + "\n")
+
+    status = "ok" if report.ok else "FAIL"
+    print(f"repro-lint: {status} — {len(report.findings)} finding(s), "
+          f"{len(report.suppressed)} suppressed, {report.num_files} files, "
+          f"rules {','.join(report.rules_run)}", file=sys.stderr)
+    for f in report.suppressed:
+        print(f"  suppressed: {f.render()}", file=sys.stderr)
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

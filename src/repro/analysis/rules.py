@@ -1,0 +1,631 @@
+"""The five repro-lint rules.  Policy data lives in repro.analysis.layers.
+
+Each rule is a function ``check(ctx) -> list[Finding]`` registered in
+``RULES``.  Rules are deliberately syntactic: they resolve names through
+import aliases and a cheap same-repo call graph, and when they cannot
+resolve something they stay silent rather than guess.  A rule that needs
+an exemption gets an inline ``# repro-lint: disable=Rn`` at the call
+site — never a special case buried here.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import functools
+from typing import Callable
+
+from repro.analysis import layers
+from repro.analysis.callgraph import FunctionIndex, reachable_from_jit
+from repro.analysis.engine import (Finding, SourceFile, dotted_name,
+                                   module_matches, parent)
+from repro.analysis.importgraph import ImportGraph
+
+
+class Context:
+    """Shared, lazily-built indexes over the linted file set."""
+
+    def __init__(self, files: list[SourceFile]):
+        self.files = [f for f in files if f.tree is not None]
+        self.by_module = {f.module: f for f in self.files}
+
+    @functools.cached_property
+    def import_graph(self) -> ImportGraph:
+        return ImportGraph(self.files)
+
+    @functools.cached_property
+    def function_index(self) -> FunctionIndex:
+        return FunctionIndex(self.files)
+
+    @functools.cached_property
+    def jit_reachable(self) -> dict[tuple[str, str], str]:
+        return reachable_from_jit(self.function_index)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    title: str
+    doc: str
+    check: Callable[[Context], list[Finding]]
+
+
+# --------------------------------------------------------------------------
+# shared helpers
+# --------------------------------------------------------------------------
+
+
+def _import_origins(tree: ast.AST) -> dict[str, str]:
+    """name -> dotted origin for every import binding in the file.
+
+    ``import numpy as np`` -> {"np": "numpy"};
+    ``from time import perf_counter`` -> {"perf_counter": "time.perf_counter"};
+    ``from jax import random`` -> {"random": "jax.random"}.
+    Function-level imports are included: origin resolution is about what a
+    *name* means, not about when the module loads.
+    """
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and not node.level \
+                and node.module:
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def _resolve_dotted(name: str, origins: dict[str, str]) -> str:
+    """Rewrite the root segment of a dotted name through import aliases."""
+    root, _, rest = name.partition(".")
+    origin = origins.get(root)
+    if origin is None:
+        return name
+    return f"{origin}.{rest}" if rest else origin
+
+
+def _func_scopes(tree: ast.AST):
+    """Yield (scope_node, body) for the module and every def, outermost
+    first.  Bodies are the immediate statement lists; nested defs show up
+    as their own scope."""
+    yield tree, tree.body
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node, node.body
+
+
+# --------------------------------------------------------------------------
+# R1 — jit purity
+# --------------------------------------------------------------------------
+
+
+_CAST_NAMES = ("float", "int", "bool")
+
+
+def _check_r1(ctx: Context) -> list[Finding]:
+    findings: list[Finding] = []
+    for (mod, name), root in sorted(ctx.jit_reachable.items()):
+        sf, fn = ctx.function_index.functions[(mod, name)]
+        origins = _import_origins(sf.tree)
+        params = {a.arg for f in ast.walk(fn)
+                  if isinstance(f, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                    ast.Lambda))
+                  for a in ([*f.args.posonlyargs, *f.args.args,
+                             *f.args.kwonlyargs]
+                            + [x for x in (f.args.vararg, f.args.kwarg)
+                               if x is not None])}
+
+        def touches_param(node: ast.AST) -> bool:
+            return any(isinstance(n, ast.Name) and n.id in params
+                       for n in ast.walk(node))
+
+        def emit(node: ast.AST, what: str) -> None:
+            findings.append(Finding(
+                "R1", sf.rel, node.lineno,
+                f"{what} inside jit-traced `{name}` "
+                f"(reached from {root})"))
+
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                d = dotted_name(node.func)
+                resolved = _resolve_dotted(d, origins) if d else None
+                if resolved and any(
+                        resolved.startswith(p)
+                        for p in layers.HOST_CALL_PREFIXES):
+                    emit(node, f"host-side call `{d}`")
+                elif d == "print":
+                    emit(node, "`print` call")
+                elif (isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "item" and not node.args):
+                    emit(node, "`.item()` forces a device sync")
+                elif d in _CAST_NAMES and node.args \
+                        and touches_param(node.args[0]):
+                    emit(node, f"`{d}()` cast of a traced argument")
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if isinstance(t, ast.Attribute) and touches_param(t.value):
+                        emit(node, "attribute assignment on a traced "
+                                   "(frozen pytree) argument")
+    return findings
+
+
+# --------------------------------------------------------------------------
+# R2 — pytree hygiene
+# --------------------------------------------------------------------------
+
+
+_MUTABLE_CALLS = ("list", "dict", "set")
+
+
+def _is_register_dataclass(call: ast.Call) -> bool:
+    d = dotted_name(call.func)
+    return d is not None and (d == "register_dataclass"
+                              or d.endswith(".register_dataclass"))
+
+
+def _literal_str_list(node: ast.AST) -> list[str] | None:
+    if isinstance(node, (ast.List, ast.Tuple)) and all(
+            isinstance(e, ast.Constant) and isinstance(e.value, str)
+            for e in node.elts):
+        return [e.value for e in node.elts]
+    return None
+
+
+def _is_mutable_literal(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        d = dotted_name(node.func)
+        if d in _MUTABLE_CALLS:
+            return True
+    return False
+
+
+def _classvar_annotation(node: ast.AST) -> bool:
+    if isinstance(node, ast.Subscript):
+        node = node.value
+    d = dotted_name(node)
+    return d in ("ClassVar", "typing.ClassVar")
+
+
+def _check_r2(ctx: Context) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in ctx.files:
+        classes = {n.name: n for n in sf.tree.body
+                   if isinstance(n, ast.ClassDef)}
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, ast.Call)
+                    and _is_register_dataclass(node)):
+                continue
+            target = node.args[0] if node.args else next(
+                (k.value for k in node.keywords if k.arg == "nodetype"), None)
+            cname = dotted_name(target) if target is not None else None
+            cls = classes.get(cname) if cname else None
+            if cls is None:
+                continue  # registered class defined elsewhere: out of scope
+
+            # frozen=True on the dataclass decorator
+            frozen = False
+            for dec in cls.decorator_list:
+                d = dotted_name(dec if not isinstance(dec, ast.Call)
+                                else dec.func)
+                if d not in ("dataclass", "dataclasses.dataclass"):
+                    continue
+                if isinstance(dec, ast.Call):
+                    frozen = any(
+                        k.arg == "frozen" and isinstance(k.value, ast.Constant)
+                        and k.value.value is True for k in dec.keywords)
+            if not frozen:
+                findings.append(Finding(
+                    "R2", sf.rel, cls.lineno,
+                    f"register_dataclass'd `{cls.name}` is not "
+                    f"`@dataclass(frozen=True)` — pytree leaves must be "
+                    f"immutable"))
+
+            # mutable defaults + declared field set
+            fields: list[str] = []
+            for stmt in cls.body:
+                if isinstance(stmt, ast.AnnAssign) \
+                        and isinstance(stmt.target, ast.Name):
+                    if _classvar_annotation(stmt.annotation):
+                        continue
+                    fields.append(stmt.target.id)
+                    default = stmt.value
+                elif isinstance(stmt, ast.Assign) and all(
+                        isinstance(t, ast.Name) for t in stmt.targets):
+                    default = stmt.value
+                else:
+                    continue
+                if default is None:
+                    continue
+                if _is_mutable_literal(default):
+                    findings.append(Finding(
+                        "R2", sf.rel, default.lineno,
+                        f"mutable default on `{cls.name}` field — shared "
+                        f"across instances (the NodeSpec bug class)"))
+                elif isinstance(default, ast.Call):
+                    d = dotted_name(default.func)
+                    if d in ("field", "dataclasses.field"):
+                        for k in default.keywords:
+                            if k.arg == "default" \
+                                    and _is_mutable_literal(k.value):
+                                findings.append(Finding(
+                                    "R2", sf.rel, k.value.lineno,
+                                    f"mutable `field(default=...)` on "
+                                    f"`{cls.name}`"))
+
+            data_kw = next((k.value for k in node.keywords
+                            if k.arg == "data_fields"), None)
+            meta_kw = next((k.value for k in node.keywords
+                            if k.arg == "meta_fields"), None)
+            if data_kw is None and meta_kw is None:
+                continue
+            data = _literal_str_list(data_kw) if data_kw is not None else []
+            meta = _literal_str_list(meta_kw) if meta_kw is not None else []
+            if data is None or meta is None:
+                findings.append(Finding(
+                    "R2", sf.rel, node.lineno,
+                    f"data/meta field split for `{cls.name}` is computed, "
+                    f"not literal — the split must be statically auditable"))
+                continue
+            declared = set(data) | set(meta)
+            actual = set(fields)
+            overlap = set(data) & set(meta)
+            if overlap:
+                findings.append(Finding(
+                    "R2", sf.rel, node.lineno,
+                    f"fields {sorted(overlap)} of `{cls.name}` declared as "
+                    f"both data and meta"))
+            if declared != actual:
+                missing = sorted(actual - declared)
+                extra = sorted(declared - actual)
+                detail = "; ".join(
+                    s for s in (f"undeclared: {missing}" if missing else "",
+                                f"unknown: {extra}" if extra else "") if s)
+                findings.append(Finding(
+                    "R2", sf.rel, node.lineno,
+                    f"data/meta split for `{cls.name}` does not cover its "
+                    f"fields ({detail})"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# R3 — zero-overhead tracing
+# --------------------------------------------------------------------------
+
+
+def _terminal_ident(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _recorder_like(node: ast.AST) -> bool:
+    ident = _terminal_ident(node)
+    return ident is not None and (ident in layers.RECORDER_NAMES
+                                  or ident.endswith("recorder"))
+
+
+def _truthy_recorder_test(test: ast.AST) -> bool:
+    """Does this `if` test establish the recorder is live?"""
+    if _recorder_like(test):
+        return True
+    if isinstance(test, ast.Compare) and len(test.ops) == 1 \
+            and isinstance(test.ops[0], ast.IsNot) \
+            and isinstance(test.comparators[0], ast.Constant) \
+            and test.comparators[0].value is None:
+        return _recorder_like(test.left)
+    if isinstance(test, ast.BoolOp) and isinstance(test.op, ast.And):
+        return any(_truthy_recorder_test(v) for v in test.values)
+    return False
+
+
+def _falsy_recorder_test(test: ast.AST) -> bool:
+    """`not rec` / `rec is None` — the early-return guard shape."""
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _recorder_like(test.operand)
+    if isinstance(test, ast.Compare) and len(test.ops) == 1 \
+            and isinstance(test.ops[0], ast.Is) \
+            and isinstance(test.comparators[0], ast.Constant) \
+            and test.comparators[0].value is None:
+        return _recorder_like(test.left)
+    return False
+
+
+def _event_names(ctx: Context) -> frozenset[str]:
+    names = set(layers.OBS_EVENT_TYPES)
+    names |= discovered_event_types(ctx)
+    return frozenset(names)
+
+
+def discovered_event_types(ctx: Context) -> frozenset[str]:
+    """Event subclasses found in repro.obs.events when it is being linted
+    (fixpoint over same-file bases).  Exposed so tests can assert the
+    static OBS_EVENT_TYPES table has not drifted from the code."""
+    sf = ctx.by_module.get(layers.OBS_EVENTS_MODULE)
+    if sf is None:
+        return frozenset()
+    classes = [n for n in sf.tree.body if isinstance(n, ast.ClassDef)]
+    found = {"Event"} if any(c.name == "Event" for c in classes) else set()
+    changed = True
+    while changed:
+        changed = False
+        for c in classes:
+            if c.name in found:
+                continue
+            if any(_terminal_ident(b) in found for b in c.bases):
+                found.add(c.name)
+                changed = True
+    return frozenset(found)
+
+
+def _guarded(node: ast.AST) -> bool:
+    """Is this construction dominated by a recorder-truthiness check?
+
+    Either an enclosing ``if <recorder-ish>:`` whose *body* contains the
+    node, or an earlier ``if not <recorder-ish>: return`` in any enclosing
+    statement block.
+    """
+    child: ast.AST = node
+    p = parent(node)
+    while p is not None:
+        if isinstance(p, ast.If) and any(child is s for s in p.body) \
+                and _truthy_recorder_test(p.test):
+            return True
+        body = getattr(p, "body", None)
+        if isinstance(body, list):
+            for i, stmt in enumerate(body):
+                if stmt is child:
+                    for earlier in body[:i]:
+                        if isinstance(earlier, ast.If) \
+                                and _falsy_recorder_test(earlier.test) \
+                                and earlier.body and all(
+                                    isinstance(s, (ast.Return, ast.Raise,
+                                                   ast.Continue))
+                                    for s in earlier.body):
+                            return True
+                    break
+        child = p
+        p = parent(p)
+    return False
+
+
+def _check_r3(ctx: Context) -> list[Finding]:
+    findings: list[Finding] = []
+    events = _event_names(ctx)
+    for sf in ctx.files:
+        if module_matches(sf.module, "repro.obs"):
+            continue
+        origins = _import_origins(sf.tree)
+        # names in this file that are event constructors
+        local_events = {name for name, origin in origins.items()
+                        if origin.startswith("repro.obs")
+                        and origin.rsplit(".", 1)[-1] in events}
+        obs_modules = {name for name, origin in origins.items()
+                       if module_matches(origin, "repro.obs")
+                       or origin == "repro.obs"}
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            ev: str | None = None
+            if isinstance(func, ast.Name) and func.id in local_events:
+                ev = func.id
+            elif isinstance(func, ast.Attribute) \
+                    and isinstance(func.value, ast.Name) \
+                    and func.value.id in obs_modules \
+                    and func.attr in events:
+                ev = func.attr
+            if ev is None or _guarded(node):
+                continue
+            findings.append(Finding(
+                "R3", sf.rel, node.lineno,
+                f"`{ev}(...)` constructed without an `if recorder:` guard "
+                f"— tracing must be zero-overhead when disabled"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# R4 — import boundaries
+# --------------------------------------------------------------------------
+
+
+def _check_r4(ctx: Context) -> list[Finding]:
+    findings: list[Finding] = []
+    graph = ctx.import_graph
+    seen: set[tuple] = set()
+    for rule in layers.LAYERING:
+        scope_mods = sorted(m for m in graph.known
+                            if module_matches(m, rule.scope))
+        for mod in scope_mods:
+            if rule.transitive:
+                reached = graph.reach(mod)
+                hits = {d: e for d, e in reached.items()
+                        if module_matches(d, rule.forbidden)
+                        and not any(module_matches(d, a)
+                                    for a in rule.allow)}
+            else:
+                hits = {e.dst: e for e in graph.direct(mod)
+                        if module_matches(e.dst, rule.forbidden)
+                        and not any(module_matches(e.dst, a)
+                                    for a in rule.allow)}
+            for dst in sorted(hits):
+                edge = hits[dst]
+                if rule.transitive:
+                    chain = graph.chain(mod, dst, graph.reach(mod))
+                    # report at the first hop out of the scope module
+                    first = graph.reach(mod).get(chain[1]) \
+                        if len(chain) > 1 else edge
+                    edge = first or edge
+                    via = " -> ".join(chain)
+                else:
+                    via = f"{mod} -> {dst}"
+                key = (rule.scope, rule.forbidden, mod, edge.path, edge.line)
+                if key in seen:
+                    continue
+                seen.add(key)
+                why = f" ({rule.why})" if rule.why else ""
+                findings.append(Finding(
+                    "R4", edge.path, edge.line,
+                    f"forbidden import: {via} — `{rule.scope}` must not "
+                    f"import `{rule.forbidden}`{why}"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# R5 — PRNG key discipline
+# --------------------------------------------------------------------------
+
+
+_JAX_RANDOM = "jax.random."
+
+
+def _prng_call(node: ast.Call, origins: dict[str, str]):
+    """(kind, key_name) for jax.random calls; kind in {draw, derive}."""
+    d = dotted_name(node.func)
+    if d is None:
+        return None
+    resolved = _resolve_dotted(d, origins)
+    if not resolved.startswith(_JAX_RANDOM):
+        return None
+    fname = resolved[len(_JAX_RANDOM):]
+    if "." in fname:
+        return None
+    key_arg = node.args[0] if node.args else next(
+        (k.value for k in node.keywords if k.arg == "key"), None)
+    key = key_arg.id if isinstance(key_arg, ast.Name) else None
+    kind = "derive" if fname in layers.PRNG_DERIVERS else "draw"
+    return kind, key, fname
+
+
+def _own_nodes(stmt: ast.stmt):
+    """Expression nodes belonging to this statement itself: children that
+    are statements get processed by the block walk, nested defs/lambdas
+    are their own R5 scope — both subtrees are excluded here."""
+    def visit(node: ast.AST):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.stmt, ast.Lambda)):
+                continue
+            yield child
+            yield from visit(child)
+
+    yield from visit(stmt)
+
+
+def _assigned_names(stmt: ast.stmt) -> list[str]:
+    out: list[str] = []
+
+    def grab(target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            out.append(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                grab(e)
+        elif isinstance(target, ast.Starred):
+            grab(target.value)
+
+    if isinstance(stmt, ast.Assign):
+        for t in stmt.targets:
+            grab(t)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        grab(stmt.target)
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        grab(stmt.target)
+    for n in _own_nodes(stmt):
+        if isinstance(n, ast.NamedExpr):
+            grab(n.target)
+    return out
+
+
+def _check_r5(ctx: Context) -> list[Finding]:
+    findings: list[Finding] = []
+    for sf in ctx.files:
+        origins = _import_origins(sf.tree)
+
+        def handle_stmt(stmt: ast.stmt, consumed: dict[str, int]) -> None:
+            """Calls in the statement's own expressions, then its
+            assignment targets (a draw's result binds after the call)."""
+            calls = sorted((n for n in _own_nodes(stmt)
+                            if isinstance(n, ast.Call)),
+                           key=lambda c: (c.lineno, c.col_offset))
+            for call in calls:
+                info = _prng_call(call, origins)
+                if info is None:
+                    continue
+                kind, key, fname = info
+                if key is None:
+                    continue
+                if key in consumed:
+                    what = ("drawn again" if kind == "draw"
+                            else f"passed to `{fname}`")
+                    findings.append(Finding(
+                        "R5", sf.rel, call.lineno,
+                        f"key `{key}` {what} after already being consumed "
+                        f"by a draw at line {consumed[key]} — split first, "
+                        f"every draw needs a fresh key"))
+                if kind == "draw":
+                    consumed[key] = call.lineno
+            for name in _assigned_names(stmt):
+                consumed.pop(name, None)
+
+        def process(body: list[ast.stmt], consumed: dict[str, int]) -> None:
+            for stmt in body:
+                handle_stmt(stmt, consumed)
+                if isinstance(stmt, ast.If):
+                    # exclusive branches: each starts from the pre-if
+                    # state; afterwards a key counts as consumed if any
+                    # branch may have consumed it
+                    merged: dict[str, int] = {}
+                    for branch in (stmt.body, stmt.orelse):
+                        state = dict(consumed)
+                        process(branch, state)
+                        merged.update(state)
+                    consumed.clear()
+                    consumed.update(merged)
+                elif isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+                    # single pass: reuse across loop iterations is not
+                    # modelled (the common idiom reassigns via split)
+                    process(stmt.body, consumed)
+                    process(stmt.orelse, consumed)
+                elif isinstance(stmt, ast.Try):
+                    process(stmt.body, consumed)
+                    for h in stmt.handlers:
+                        process(h.body, consumed)
+                    process(stmt.orelse, consumed)
+                    process(stmt.finalbody, consumed)
+                elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                    process(stmt.body, consumed)
+
+        for scope, body in _func_scopes(sf.tree):
+            # state: key name -> line of the draw that consumed it
+            process(body, {})
+    return findings
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+
+RULES: dict[str, Rule] = {
+    "R1": Rule("R1", "jit-purity",
+               "no host-side calls reachable from the jit/scan roots",
+               _check_r1),
+    "R2": Rule("R2", "pytree-hygiene",
+               "register_dataclass'd classes: frozen, no mutable defaults, "
+               "literal + complete data/meta split", _check_r2),
+    "R3": Rule("R3", "zero-overhead-tracing",
+               "obs event construction outside repro/obs must be "
+               "recorder-guarded", _check_r3),
+    "R4": Rule("R4", "import-boundaries",
+               "the layering table in repro.analysis.layers holds",
+               _check_r4),
+    "R5": Rule("R5", "prng-discipline",
+               "one draw per key; split/fold_in before reuse", _check_r5),
+}
