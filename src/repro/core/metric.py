@@ -117,6 +117,7 @@ def sample_from_hist(hist: jax.Array, rng: jax.Array, num_samples: int) -> jax.A
     """Draw latency samples consistent with a histogram (for simulation replay)."""
     hist = hist.astype(jnp.float32)
     probs = hist / jnp.maximum(hist.sum(), 1e-12)
-    bins = jax.random.categorical(rng, jnp.log(probs + 1e-20), shape=(num_samples,))
-    jitter = jax.random.uniform(jax.random.fold_in(rng, 1), (num_samples,)) * BIN_WIDTH
+    k_bins, k_jitter = jax.random.split(rng)
+    bins = jax.random.categorical(k_bins, jnp.log(probs + 1e-20), shape=(num_samples,))
+    jitter = jax.random.uniform(k_jitter, (num_samples,)) * BIN_WIDTH
     return bins.astype(jnp.float32) * BIN_WIDTH + jitter
