@@ -27,7 +27,7 @@ def _time(fn, *args, reps=3):
 def run(fast: bool = True):
     out = []
     B, S, H, hd = 1, 256, 2, 64
-    q = jax.random.normal(KEY, (B, S, H, hd))
+    q = jax.random.normal(jax.random.fold_in(KEY, 0), (B, S, H, hd))
     k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H, hd))
     v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, H, hd))
 
@@ -41,7 +41,7 @@ def run(fast: bool = True):
                 f"err={float(jnp.abs(o_j - o_r).max()):.2e}"))
 
     P = 32
-    r_ = jax.random.normal(KEY, (B, S, H * P))
+    r_ = jax.random.normal(jax.random.fold_in(KEY, 11), (B, S, H * P))
     k_ = jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, H * P))
     v_ = jax.random.normal(jax.random.fold_in(KEY, 4), (B, S, H * P))
     w_ = jax.random.uniform(jax.random.fold_in(KEY, 5), (B, S, H * P), minval=0.9, maxval=0.999)
@@ -53,7 +53,7 @@ def run(fast: bool = True):
     out.append(("kernels.rwkv_wkv.ref", us_r, "oracle"))
 
     N = 16
-    x = jax.random.normal(KEY, (B, S, H, P))
+    x = jax.random.normal(jax.random.fold_in(KEY, 12), (B, S, H, P))
     dt = jax.random.uniform(jax.random.fold_in(KEY, 7), (B, S, H), minval=0.01, maxval=0.2)
     A = -jax.random.uniform(jax.random.fold_in(KEY, 8), (H,), minval=0.5, maxval=2.0)
     Bm = jax.random.normal(jax.random.fold_in(KEY, 9), (B, S, N))
@@ -64,7 +64,7 @@ def run(fast: bool = True):
                 f"err={float(jnp.abs(o_p - o_r).max()):.2e}"))
     out.append(("kernels.mamba2_ssd.ref", us_r, "oracle"))
 
-    s = jax.random.uniform(KEY, (8, 4096), minval=0, maxval=1100)
+    s = jax.random.uniform(jax.random.fold_in(KEY, 13), (8, 4096), minval=0, maxval=1100)
     o_p, us_p = _time(ops.runqlat_hist, s)
     o_r, us_r = _time(ref.runqlat_hist_ref, s)
     out.append(("kernels.runqlat_hist.pallas_interp", us_p,
