@@ -498,6 +498,8 @@ class ControlLoop:
         on every flag — flagging consumes them).
         """
         rec = self._recorder
+        if not rec:
+            return
         diag = self.detector.last_diag
         slots = self.detector.hot_slots()
         scores = self.detector.slot_scores
