@@ -382,6 +382,8 @@ class ForecastService:
     def _emit_trust_transitions(self, node_trusted: np.ndarray,
                                 trusted: np.ndarray, t_fut: float) -> None:
         """Emit a TrustGateTransition per node whose gate just flipped."""
+        if not self.recorder:
+            return
         prev, self._trust_prev = self._trust_prev, node_trusted.copy()
         if prev is None or prev.shape != node_trusted.shape:
             return  # first projection (or post-reset): baseline, no events
