@@ -35,6 +35,8 @@ def _emit_admission(scheduler, pod, best: int, breakdown: dict) -> None:
     Each baseline records the terms its own policy actually scored on —
     the trace explains the decision as made, not as ICO would have made it.
     """
+    if not scheduler.recorder:
+        return
     from repro.obs import AdmissionDecision
     scheduler.recorder.emit(AdmissionDecision(
         scheduler=scheduler.name, workload=pod.workload, qps=float(pod.qps),
