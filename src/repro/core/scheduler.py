@@ -151,6 +151,7 @@ class ICOScheduler:
             # _interference hook); split it back out so the stored terms
             # decompose the score without double-counting
             breakdown["intf_h"] = breakdown["intf_h"] - breakdown["forecast_term"]
+        # repro-lint: disable=R3 -- only caller (select_node) guards with `if self.recorder:`
         return AdmissionDecision(
             scheduler=self.name, workload=pod.workload, qps=float(pod.qps),
             online=bool(pod.is_online), cpu_demand=float(pod.cpu_demand),
