@@ -2,9 +2,15 @@
 benches). Prints ``name,us_per_call,derived`` CSV."""
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
+
+# make `python benchmarks/run.py` equivalent to `python -m benchmarks.run`:
+# the bench modules import each other as the `benchmarks` namespace package,
+# which needs the repo root on sys.path
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 MODULES = [
     "benchmarks.bench_motivation",       # Table I / Figs 1-4
@@ -19,7 +25,27 @@ MODULES = [
 ]
 
 
+def selftest() -> int:
+    """Seconds-scale smoke: import every bench module and check it exposes
+    the ``run(fast=...)`` contract, without executing any benchmark."""
+    failures = 0
+    for modname in MODULES:
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            if not callable(getattr(mod, "run", None)):
+                raise TypeError("module has no callable run(fast=...)")
+            print(f"{modname}: ok")
+        except Exception as e:
+            failures += 1
+            print(f"{modname}: FAIL ({e})")
+            traceback.print_exc(file=sys.stderr)
+    print(f"selftest: {len(MODULES) - failures}/{len(MODULES)} modules ok")
+    return 1 if failures else 0
+
+
 def main() -> None:
+    if "--selftest" in sys.argv:
+        sys.exit(selftest())
     fast = "--full" not in sys.argv
     print("name,us_per_call,derived")
     for modname in MODULES:

@@ -13,7 +13,11 @@ stream is placed the demo replays one decision from the trace: the full
 per-node Eq. (4)-(6) breakdown behind "why did this pod land there".
 
 Run: PYTHONPATH=src python examples/colocation_sim.py
+(``--selftest`` runs a seconds-scale smoke instead: one traced admission
+on a 2-node cluster, no predictor training, no model init.)
 """
+import sys
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -99,5 +103,30 @@ def main():
     print(f"   -> node interference contribution (Eq.1): {intf:.4f}")
 
 
+def selftest() -> None:
+    """Seconds-scale smoke for CI/dev loops: one traced ICO admission on a
+    tiny cluster, skipping predictor training and the real ServeEngine."""
+    from repro.core import ICOScheduler, InterferenceQuantifier
+
+    sched = ICOScheduler(InterferenceQuantifier(lambda X: X[:, 21]))
+    rec = TraceRecorder()
+    sched.recorder = rec
+    cluster = Cluster(num_nodes=2, seed=0)
+    cluster.rollout_scan(3)
+    rec.begin_window(cluster.t)
+    prof = ONLINE_PROFILES["web_search"]
+    pod = Pod("web_search", 200.0, True)
+    pod.cpu_demand = prof.cpu_per_qps * 200.0 + prof.cpu_base
+    pod.mem_demand = prof.mem_per_qps * 200.0 + prof.mem_base
+    node = sched.select_node(pod, cluster.view())
+    assert node >= 0 and cluster.place(pod, node), "admission failed"
+    rec.resolve_admission(uid=pod.uid, placed=True)
+    assert Trace(rec.events).query("admission", placed=True)
+    print("colocation_sim selftest: ok (1 admission traced)")
+
+
 if __name__ == "__main__":
-    main()
+    if "--selftest" in sys.argv:
+        selftest()
+    else:
+        main()

@@ -210,8 +210,32 @@ def proactive_main() -> None:
     _save_trace(rec)
 
 
+def selftest() -> None:
+    """Seconds-scale smoke for CI/dev loops: one traced admission plus one
+    control-loop step on a tiny cluster (no burst, no day-scale rollout)."""
+    scheduler = ICOScheduler(InterferenceQuantifier(lambda X: X[:, 21]))
+    rec = TraceRecorder()
+    scheduler.recorder = rec
+    loop = ControlLoop(InterferenceQuantifier(lambda X: X[:, 21]),
+                       recorder=rec)
+    cluster = Cluster(num_nodes=2, seed=0)
+    cluster.rollout_scan(3)
+    rec.begin_window(cluster.t)
+    pod = make_online("web_search", 300)
+    node = scheduler.select_node(pod, cluster.view())
+    assert node >= 0 and cluster.place(pod, node), "admission failed"
+    rec.resolve_admission(uid=pod.uid, placed=True)
+    cluster.rollout_scan(3)
+    rec.begin_window(cluster.t)
+    loop.step(cluster)
+    assert Trace(rec.events).query("admission", placed=True)
+    print("mitigation_demo selftest: ok (admission + 1 control step traced)")
+
+
 if __name__ == "__main__":
-    if "--proactive" in sys.argv:
+    if "--selftest" in sys.argv:
+        selftest()
+    elif "--proactive" in sys.argv:
         proactive_main()
     else:
         main()
