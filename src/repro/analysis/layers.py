@@ -61,6 +61,12 @@ LAYERING: tuple[LayerRule, ...] = (
     LayerRule("repro.cluster", "repro.control",
               why="control -> cluster is the real dependency direction; the "
                   "scan-fold imports in state.py stay function-level"),
+    # the fleet tables/topology are leaf data consumed by schedulers and
+    # the policy alike; reaching upward would make machine-class edits
+    # drag the whole mitigation stack into the admission hot path.
+    LayerRule("repro.cluster.fleet", "repro.control", transitive=True,
+              why="fleet is leaf data (classes, topology, prefilter); it "
+                  "must stay importable without the control stack"),
     # the linter itself: stdlib-only, lintable-while-broken.
     LayerRule("repro.analysis", "repro", allow=("repro.analysis",),
               why="the linter must be able to lint a tree whose runtime "
@@ -82,6 +88,7 @@ LAYERING: tuple[LayerRule, ...] = (
 # path (e.g. the planned multi-objective optimizer) is promoted to
 # load-bearing.
 JIT_ROOT_MODULES: tuple[str, ...] = (
+    "repro.cluster.fleet",
     "repro.cluster.state",
     "repro.control.detector",
     "repro.control.forecast",

@@ -10,8 +10,15 @@ plane (``repro.control``), and the training-data generator all read the
 same dataclass instead of re-interpreting an untyped dict, so a new
 telemetry field is declared exactly once.
 """
+from repro.cluster.fleet import (
+    Fleet,
+    MachineClass,
+    Topology,
+    MACHINE_CLASSES,
+    make_fleet,
+)
 from repro.cluster.simulator import Cluster, ClusterState, NodeSpec, S_ON, S_OFF
-from repro.cluster.state import batched_rollout, scan_windows
+from repro.cluster.state import FleetParams, batched_rollout, scan_windows
 from repro.cluster.view import ClusterView
 from repro.cluster.workloads import (
     Pod,
@@ -25,7 +32,13 @@ __all__ = [
     "Cluster",
     "ClusterState",
     "ClusterView",
+    "Fleet",
+    "FleetParams",
+    "MachineClass",
+    "Topology",
+    "MACHINE_CLASSES",
     "NodeSpec",
+    "make_fleet",
     "batched_rollout",
     "scan_windows",
     "S_ON",

@@ -159,6 +159,7 @@ def run_experiment(
     seed: int = 7,
     settle_ticks: int = 40,
     *,
+    fleet=None,
     control_loop=None,
     forecast=None,
     control_window: int | None = None,
@@ -170,6 +171,12 @@ def run_experiment(
 ) -> ExperimentResult:
     """Replay one arrival trace under a scheduler.
 
+    fleet: optional ``repro.cluster.Fleet``.  When given it defines the
+        node population — per-class capacities, delay-curve parameters and
+        the rack/zone topology — and ``num_nodes`` is taken from it
+        (the explicit argument is ignored, mirroring ``Cluster``).
+        ``None`` keeps the legacy homogeneous cluster, and
+        is bit-identical to a ``Fleet.homogeneous(num_nodes)`` run.
     control_loop: optional ``repro.control.ControlLoop`` — or a zero-arg
         factory returning one, so drivers sweeping several schedulers can
         thread a *fresh* loop per run instead of sharing one instance.  Its
@@ -239,7 +246,8 @@ def run_experiment(
         s = control_loop.stats
         stats0 = (s.actions_applied, s.proactive_applied,
                   s.predicted_reduction, s.realized_reduction)
-    cluster = Cluster(num_nodes=num_nodes, seed=seed)
+    cluster = Cluster(num_nodes=num_nodes, seed=seed, fleet=fleet)
+    num_nodes = cluster.n  # fleet overrides the scalar argument
     use_scan = fast if fast is not None else (recorder is None)
     roll = cluster.rollout_scan if use_scan else cluster.rollout
     roll(30)
@@ -382,6 +390,7 @@ def run_experiment(
             num_nodes=num_nodes,
             seed=seed,
             settle_ticks=settle_ticks,
+            fleet=fleet,
         )
     return ExperimentResult(
         scheduler=scheduler.name,
@@ -414,7 +423,9 @@ def replay_plan_batched(
     vmapped ``state.batched_rollout`` call (common-random-placements
     design: the seed axis isolates simulation noise from placement
     quality).  A seed equal to the reference run's reproduces its exact
-    key stream, so that entry doubles as a parity check.
+    key stream, so that entry doubles as a parity check.  A plan recorded
+    from a fleet run carries its ``Fleet``; the replay rebuilds the same
+    per-node capacities and delay-curve parameters from it.
 
     Returns ``{"seeds": [...], "wall_s": float, "num_windows": int}``;
     each per-seed entry carries avg/p90/p99 RT, arrival-phase cross-node
@@ -433,6 +444,7 @@ def replay_plan_batched(
 
     t_end = int(round(plan["t_end"]))
     num_nodes = plan["num_nodes"]
+    fleet = plan.get("fleet")
     settle_ticks = plan.get("settle_ticks", 40)
     total_chunks = t_end // cstate.CHUNK
     cpw = max(1, window_ticks // cstate.CHUNK)
@@ -444,11 +456,18 @@ def replay_plan_batched(
         .reshape(num_windows, cpw, -1)
         for s in sim_seeds
     ])
-    state0 = cstate.ClusterState.create(num_nodes)
+    if fleet is not None:
+        state0 = cstate.ClusterState.create(
+            num_nodes, fleet.cores(), fleet.mem_gb())
+        fleet_params = fleet.params()
+    else:
+        state0 = cstate.ClusterState.create(num_nodes)
+        fleet_params = None  # batched_rollout defaults to uniform params
     profiles = {k: jnp.asarray(v) for k, v in W.online_arrays().items()}
 
     t0 = time.time()
-    final, outs = cstate.batched_rollout(state0, profiles, 0.0, keys, events)
+    final, outs = cstate.batched_rollout(state0, profiles, 0.0, keys, events,
+                                         fleet=fleet_params)
     rt = np.asarray(outs["rt"])          # (B, W, span, N, S_ON) -> forces sync
     wall_s = time.time() - t0
 
@@ -513,6 +532,7 @@ def compare_schedulers(
     forecast: bool = False,
     trace: tuple | None = None,
     control_window: int | None = None,
+    fleet=None,
 ) -> dict[str, ExperimentResult]:
     """Figs. 13-15 comparison across ICO / RR / HUP / LQP (+ ICO-F).
 
@@ -529,8 +549,9 @@ def compare_schedulers(
     run's control loop, so placement and mitigation consume the same
     projection.  ``trace`` optionally replaces the default arrival trace
     with a pre-built (pods, gaps) pair, e.g. ``bursty_trace(...)``;
-    ``control_window`` is forwarded to ``run_experiment`` (day-scale traces
-    need the gap slicing).
+    ``control_window`` and ``fleet`` are forwarded to ``run_experiment``
+    (day-scale traces need the gap slicing; a ``repro.cluster.Fleet``
+    swaps in a heterogeneous node population for every scheduler alike).
     """
     predictor = predictor or train_default_predictor(seed=seed)
     pods, gaps = trace if trace is not None else _arrival_trace(num_pods, seed)
@@ -562,6 +583,7 @@ def compare_schedulers(
                 InterferenceQuantifier(predictor.predict), cfg,
                 forecast_service=svc)
         out[name] = run_experiment(sched, pods, gaps, num_nodes=num_nodes,
-                                   seed=seed, control_loop=loop, forecast=svc,
+                                   seed=seed, fleet=fleet, control_loop=loop,
+                                   forecast=svc,
                                    control_window=control_window)
     return out

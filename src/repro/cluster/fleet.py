@@ -1,0 +1,308 @@
+"""Machine-class tables and rack/zone topology: the heterogeneous fleet.
+
+The paper's testbed is homogeneous (32-core / 64 GB nodes), but the
+scheduling-latency metric is pitched at production co-location where
+fleets mix machine generations and migrations move bytes across shared
+links.  This module is the hardware description the rest of the stack
+reads:
+
+* ``MachineClass`` — one machine generation: capacity (cores / mem) plus
+  the node-local contention physics (delay-curve base / scale / knee and
+  the thread-oversubscription slope that used to be module constants in
+  ``cluster.state``).
+
+* ``Topology`` — racks grouped into zones with per-link bandwidth and
+  latency.  ``transfer_cost(src, dst, gb)`` prices a migration as bytes
+  moved over the *bottleneck* link of the path (same-rack < cross-rack <
+  cross-zone for any positive size, monotone in bytes), and
+  ``cost_factor`` expresses it as a multiple of the same-rack price so
+  the mitigation policy can scale its abstract action costs without
+  retuning them — on a single-rack fleet every factor is exactly 1.0,
+  which is what keeps the homogeneous degenerate case bitwise-identical.
+
+* ``Fleet`` — per-node machine classes + a topology.  ``make_fleet``
+  mixes classes by weight (the Helix ``node_type_percentage`` idiom) and
+  ``Fleet.homogeneous`` builds the single-class single-rack fleet that
+  reproduces the pre-fleet simulator exactly.
+
+* ``topk_candidates`` — the jit'd admission prefilter: per-class
+  normalized projected utilization for all N nodes, ``lax.top_k`` down
+  to a fixed candidate set so the expensive interference scoring the
+  schedulers run stays O(k) while fleets grow to thousands of nodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.state import (
+    OVERSUB_SLOPE,
+    RHO_EPS,
+    RUNQLAT_BASE,
+    RUNQLAT_SCALE,
+    FleetParams,
+)
+
+__all__ = [
+    "MachineClass", "Topology", "Fleet", "MACHINE_CLASSES", "DEFAULT_MIX",
+    "make_fleet", "topk_candidates",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineClass:
+    """One machine generation: capacity plus contention physics.
+
+    The defaults are the paper's testbed node — ``MachineClass("std32")``
+    carries exactly the constants the kernel used before fleets existed,
+    so a fleet of them is the bitwise degenerate case.
+    """
+
+    name: str
+    cores: float = 32.0
+    mem_gb: float = 64.0
+    delay_base: float = RUNQLAT_BASE
+    delay_scale: float = RUNQLAT_SCALE
+    rho_knee: float = RHO_EPS
+    oversub_slope: float = OVERSUB_SLOPE
+
+
+# the machine-class table: std32 is the paper testbed; the others are
+# plausible co-located generations (newer silicon has more headroom and a
+# flatter oversubscription penalty, older small nodes saturate earlier)
+MACHINE_CLASSES: dict[str, MachineClass] = {
+    "std32": MachineClass("std32"),
+    "hi96": MachineClass("hi96", cores=96.0, mem_gb=192.0, delay_base=2.7,
+                         delay_scale=48.0, rho_knee=0.04,
+                         oversub_slope=0.12),
+    "lo16": MachineClass("lo16", cores=16.0, mem_gb=32.0, delay_base=3.5,
+                         delay_scale=70.0, rho_knee=0.06,
+                         oversub_slope=0.22),
+    "mem64": MachineClass("mem64", cores=64.0, mem_gb=256.0, delay_base=2.9,
+                          delay_scale=52.0, rho_knee=0.05,
+                          oversub_slope=0.14),
+}
+
+# Helix-style node_type_percentage weights: 60% testbed nodes, a few big
+# boxes, a tail of old small ones
+DEFAULT_MIX: dict[str, float] = {"std32": 6, "hi96": 1, "lo16": 3}
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Topology:
+    """Rack/zone network with per-link bandwidth (GB/s) and latency (s).
+
+    Three link tiers: node<->ToR inside a rack, rack<->spine inside a
+    zone, zone<->zone over the core.  A transfer's throughput is set by
+    the slowest link on its path (bandwidth-bottleneck routing) and its
+    setup latency by the path's end-to-end latency.
+    """
+
+    rack_of: np.ndarray        # (N,) int32: node -> rack
+    zone_of_rack: np.ndarray   # (R,) int32: rack -> zone
+    rack_gbps: float = 25.0    # node <-> ToR
+    spine_gbps: float = 10.0   # rack <-> zone spine
+    zone_gbps: float = 4.0     # zone <-> zone core
+    rack_lat_s: float = 0.0001
+    spine_lat_s: float = 0.001
+    zone_lat_s: float = 0.004
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.rack_of.shape[0])
+
+    def zone_of(self, node: int) -> int:
+        return int(self.zone_of_rack[int(self.rack_of[node])])
+
+    def _path(self, src: int, dst: int) -> tuple[float, float]:
+        """(bottleneck GB/s, end-to-end latency s) for the src->dst path."""
+        if self.rack_of[src] == self.rack_of[dst]:
+            return self.rack_gbps, self.rack_lat_s
+        if self.zone_of(src) == self.zone_of(dst):
+            return (min(self.rack_gbps, self.spine_gbps),
+                    self.rack_lat_s + self.spine_lat_s)
+        return (min(self.rack_gbps, self.spine_gbps, self.zone_gbps),
+                self.rack_lat_s + self.spine_lat_s + self.zone_lat_s)
+
+    def transfer_cost(self, src: int, dst: int, gb: float) -> float:
+        """Seconds to move ``gb`` gigabytes from src to dst.
+
+        0.0 on-node; otherwise path latency + bytes over the bottleneck
+        link, so for any positive size same-rack < cross-rack <
+        cross-zone, and cost is strictly monotone in bytes.
+        """
+        if src == dst:
+            return 0.0
+        bw, lat = self._path(src, dst)
+        return lat + float(gb) / bw
+
+    def cost_factor(self, src: int, dst: int, gb: float) -> float:
+        """Transfer cost as a multiple of the same-rack price for the
+        same bytes — the policy multiplies its abstract action costs by
+        this, so a single-rack fleet (factor exactly 1.0 everywhere)
+        reprices nothing."""
+        if src == dst:
+            return 1.0
+        ref = self.rack_lat_s + float(gb) / self.rack_gbps
+        return self.transfer_cost(src, dst, gb) / ref
+
+    @classmethod
+    def regular(cls, num_nodes: int, nodes_per_rack: int = 16,
+                racks_per_zone: int = 4, **links) -> "Topology":
+        """Consecutive nodes fill racks, consecutive racks fill zones."""
+        rack_of = np.arange(num_nodes, dtype=np.int32) // nodes_per_rack
+        num_racks = int(rack_of[-1]) + 1 if num_nodes else 0
+        zone_of_rack = np.arange(num_racks, dtype=np.int32) // racks_per_zone
+        return cls(rack_of=rack_of, zone_of_rack=zone_of_rack, **links)
+
+    @classmethod
+    def flat(cls, num_nodes: int) -> "Topology":
+        """Every node in one rack in one zone: the degenerate topology
+        (all cost factors 1.0)."""
+        return cls.regular(num_nodes, nodes_per_rack=max(num_nodes, 1),
+                           racks_per_zone=1)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Fleet:
+    """Per-node machine classes + the network they share."""
+
+    classes: tuple[MachineClass, ...]  # length N, one per node
+    topology: Topology
+
+    def __post_init__(self):
+        if len(self.classes) != self.topology.num_nodes:
+            raise ValueError(
+                f"{len(self.classes)} machine classes for a "
+                f"{self.topology.num_nodes}-node topology")
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.classes)
+
+    def node_class(self, node: int) -> MachineClass:
+        return self.classes[node]
+
+    def class_names(self) -> tuple[str, ...]:
+        return tuple(c.name for c in self.classes)
+
+    def cores(self) -> np.ndarray:
+        """(N,) float64 per-node core capacity."""
+        return np.array([c.cores for c in self.classes], np.float64)
+
+    def mem_gb(self) -> np.ndarray:
+        """(N,) float64 per-node memory capacity."""
+        return np.array([c.mem_gb for c in self.classes], np.float64)
+
+    def params(self) -> FleetParams:
+        """The (N,) float32 delay-curve arrays the rollout kernel carries."""
+        return FleetParams(
+            delay_base=jnp.asarray(
+                [c.delay_base for c in self.classes], jnp.float32),
+            delay_scale=jnp.asarray(
+                [c.delay_scale for c in self.classes], jnp.float32),
+            rho_knee=jnp.asarray(
+                [c.rho_knee for c in self.classes], jnp.float32),
+            oversub_slope=jnp.asarray(
+                [c.oversub_slope for c in self.classes], jnp.float32),
+        )
+
+    def delay_params64(self) -> dict[str, np.ndarray]:
+        """Per-node float64 delay parameters for host-side relief math.
+
+        Built from the MachineClass Python floats, NOT by widening the
+        float32 kernel arrays: the policy's relief model always ran the
+        delay curve in float64 (``float64(0.05) != float64(float32(0.05))``),
+        and keeping that path double-precision-exact is part of the
+        homogeneous-degenerate-case guarantee.
+        """
+        return {
+            "base": np.array([c.delay_base for c in self.classes],
+                             np.float64),
+            "scale": np.array([c.delay_scale for c in self.classes],
+                              np.float64),
+            "knee": np.array([c.rho_knee for c in self.classes], np.float64),
+        }
+
+    @classmethod
+    def homogeneous(cls, num_nodes: int,
+                    machine_class: MachineClass | None = None) -> "Fleet":
+        """Single class, single rack, single zone — the degenerate fleet
+        that reproduces the pre-fleet simulator bit-for-bit."""
+        mc = machine_class or MACHINE_CLASSES["std32"]
+        return cls(classes=(mc,) * num_nodes,
+                   topology=Topology.flat(num_nodes))
+
+
+def make_fleet(num_nodes: int, mix: dict[str, float] | None = None, *,
+               nodes_per_rack: int = 16, racks_per_zone: int = 4,
+               seed: int = 0) -> Fleet:
+    """Mix machine classes by weight across a regular rack/zone topology.
+
+    ``mix`` maps class name -> weight (the Helix ``node_type_percentage``
+    idiom); counts are apportioned by largest remainder and assigned to
+    node indices by a seeded permutation, so the same (num_nodes, mix,
+    seed) always yields the same fleet.
+    """
+    mix = dict(DEFAULT_MIX if mix is None else mix)
+    if not mix:
+        raise ValueError("empty machine-class mix")
+    unknown = sorted(set(mix) - set(MACHINE_CLASSES))
+    if unknown:
+        raise ValueError(f"unknown machine classes: {unknown}")
+    names = sorted(mix)
+    weights = np.array([mix[n] for n in names], np.float64)
+    if (weights < 0).any() or weights.sum() <= 0:
+        raise ValueError(f"machine-class weights must be >= 0: {mix}")
+    exact = weights / weights.sum() * num_nodes
+    counts = np.floor(exact).astype(int)
+    remainder = exact - counts
+    for i in np.argsort(-remainder)[: num_nodes - int(counts.sum())]:
+        counts[i] += 1
+    pool = [n for name, c in zip(names, counts) for n in [name] * int(c)]
+    order = np.random.default_rng(seed).permutation(num_nodes)
+    assigned = [""] * num_nodes
+    for slot, name in zip(order, pool):
+        assigned[int(slot)] = name
+    classes = tuple(MACHINE_CLASSES[n] for n in assigned)
+    topo = Topology.regular(num_nodes, nodes_per_rack=nodes_per_rack,
+                            racks_per_zone=racks_per_zone)
+    return Fleet(classes=classes, topology=topo)
+
+
+# --------------------------------------------------------------------------
+# jit'd admission prefilter (the scoring path schedulers call per pod)
+# --------------------------------------------------------------------------
+
+
+def _prefilter_scores(cpu_cur, cpu_sum, mem_cur, mem_sum, cpu_pod, mem_pod,
+                      cpu_thr, mem_thr):
+    """Cheap per-node admission score: negative projected utilization,
+    normalized by each node's own capacity (Eq. 5-6 per-class form), with
+    threshold-violating nodes pushed to -inf."""
+    cpu_proj = (cpu_cur + cpu_pod) / cpu_sum
+    mem_proj = (mem_cur + mem_pod) / mem_sum
+    feasible = (cpu_proj <= cpu_thr) & (mem_proj <= mem_thr)
+    score = -jnp.maximum(cpu_proj, mem_proj)
+    return jnp.where(feasible, score, -jnp.inf)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def topk_candidates(cpu_cur, cpu_sum, mem_cur, mem_sum, cpu_pod, mem_pod,
+                    cpu_thr, mem_thr, k: int):
+    """Top-k candidate nodes for one pod, one fused dispatch over all N.
+
+    Returns (idx, scores): the k best node indices by the cheap
+    normalized-utilization prefilter and their scores (-inf marks
+    infeasible padding).  The expensive interference scoring then runs on
+    only these k, which is what keeps admission latency sub-linear in
+    fleet size.
+    """
+    scores = _prefilter_scores(cpu_cur, cpu_sum, mem_cur, mem_sum, cpu_pod,
+                               mem_pod, cpu_thr, mem_thr)
+    vals, idx = jax.lax.top_k(scores, k)
+    return idx, vals

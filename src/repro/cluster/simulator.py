@@ -44,6 +44,7 @@ import numpy as np
 
 from repro.cluster import workloads as W
 from repro.cluster import state as cstate
+from repro.cluster.fleet import Fleet
 from repro.cluster.state import (  # re-exported: the historical home
     CHUNK,
     GAMMA_SHAPE,
@@ -62,7 +63,7 @@ from repro.cluster.state import (  # re-exported: the historical home
 from repro.cluster.workloads import Pod
 
 __all__ = [
-    "Cluster", "ClusterState", "NodeSpec", "S_ON", "S_OFF",
+    "Cluster", "ClusterState", "Fleet", "NodeSpec", "S_ON", "S_OFF",
     "SAMPLES_PER_TICK", "TICKS_PER_DAY", "OS_BASE_CORES", "RUNQLAT_BASE",
     "RUNQLAT_SCALE", "RHO_EPS", "GAMMA_SHAPE", "delay_curve",
 ]
@@ -87,15 +88,33 @@ class Cluster:
     CHUNK = CHUNK  # fixed scan length -> exactly one XLA compilation
 
     def __init__(self, num_nodes: int = 12, spec: NodeSpec | None = None,
-                 seed: int = 0):
-        spec = NodeSpec() if spec is None else spec
+                 seed: int = 0, fleet: Fleet | None = None):
+        if fleet is not None:
+            # the fleet is authoritative: per-node capacities come from
+            # its machine classes, so a scalar NodeSpec cannot also apply
+            if spec is not None:
+                raise ValueError(
+                    "pass capacities via the fleet's machine classes, "
+                    "not a NodeSpec")
+            num_nodes = fleet.num_nodes
+            self.spec = None
+            self.state = ClusterState.create(
+                num_nodes, fleet.cores(), fleet.mem_gb())
+        else:
+            # legacy homogeneous path: kept verbatim (scalar create call)
+            # so pre-fleet clusters stay bitwise-identical
+            spec = NodeSpec() if spec is None else spec
+            self.spec = spec
+            self.state = ClusterState.create(num_nodes, spec.cores,
+                                             spec.mem_gb)
         self.n = num_nodes
-        self.spec = spec
+        self.fleet = fleet
+        self.fleet_params = (fleet.params() if fleet is not None
+                             else cstate.FleetParams.uniform(num_nodes))
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
         self.t = 0.0
         self.profiles = {k: jnp.asarray(v) for k, v in W.online_arrays().items()}
-        self.state = ClusterState.create(num_nodes, spec.cores, spec.mem_gb)
         self.last: dict | None = None
         self._pod_slots: dict[int, tuple[str, int, int]] = {}  # uid -> (kind, node, slot)
         self._uid = 0
@@ -143,12 +162,19 @@ class Cluster:
         return True
 
     def remove(self, uid: int) -> None:
+        # reconcile first so a kernel-expired offline uid raises the same
+        # KeyError as migrate()/resize() instead of double-evicting a slot
+        # the kernel already deactivated
+        self.reconcile()
         if uid not in self._pod_slots:
             raise KeyError(
                 f"unknown pod uid {uid}: never placed, already removed, or a "
                 f"finished offline job cleared by reconcile()"
             )
         kind, node, s = self._pod_slots.pop(uid)
+        # both evict transforms clear the slot's parameters, so readers of
+        # raw state between this remove and the next reconcile never see
+        # the ghost allocation of the departed pod
         if kind == "on":
             self.state = cstate.evict_online(self.state, node, s)
         else:
@@ -160,9 +186,11 @@ class Cluster:
 
         The rollout kernel deactivates finished slots but cannot touch the
         host-side ``_pod_slots`` map, so without this the map leaks and stale
-        off_cores/off_mem persist in state (harmless to the sim, which masks
-        by off_active, but wrong for any code reading raw state).  Returns
-        the uids of the jobs that were cleared.  Not logged: the replay path
+        off_cores/off_mem persist in state (invisible to the sim, which masks
+        by off_active, but wrong for any code reading raw state — which is
+        why ``remove()`` reconciles first and the evict transforms clear
+        slot params at remove time rather than waiting for this sweep).
+        Returns the uids of the jobs that were cleared.  Not logged: the replay path
         needs no reconcile events, because its dynamics mask by off_active
         and placements overwrite every slot field.
         """
@@ -293,7 +321,8 @@ class Cluster:
         for _ in range(chunks):
             self.key, k = jax.random.split(self.key)
             self.state, summary = cstate.rollout_window(
-                self.state, self.profiles, jnp.float32(self.t), k, self.CHUNK
+                self.state, self.profiles, self.fleet_params,
+                jnp.float32(self.t), k, self.CHUNK
             )
             self.t += self.CHUNK
             parts.append(summary)
@@ -312,7 +341,8 @@ class Cluster:
         chunks = max(1, -(-num_ticks // self.CHUNK))
         self.key, ks = cstate.chunk_key_stream(self.key, chunks)
         self.state, stacked = cstate.rollout_chunks(
-            self.state, self.profiles, jnp.float32(self.t), ks)
+            self.state, self.profiles, self.fleet_params,
+            jnp.float32(self.t), ks)
         self.t += chunks * self.CHUNK
         stacked = jax.tree.map(np.asarray, stacked)
         parts = [jax.tree.map(lambda a, i=i: a[i], stacked)
@@ -345,6 +375,17 @@ class Cluster:
         off_pressure = (np.asarray(self.state.off_cores)
                         * np.asarray(self.state.off_burst)
                         * off_active).sum(-1)
+        # per-node delay-curve params in float64, derived from the machine
+        # classes' Python floats (never widened from the f32 kernel arrays)
+        # so host-side relief math keeps its historical double precision
+        if self.fleet is not None:
+            d64 = self.fleet.delay_params64()
+            node_class = self.fleet.class_names()
+        else:
+            d64 = {"base": np.full(self.n, RUNQLAT_BASE, np.float64),
+                   "scale": np.full(self.n, RUNQLAT_SCALE, np.float64),
+                   "knee": np.full(self.n, RHO_EPS, np.float64)}
+            node_class = None
         return ClusterView(
             t=float(self.t),
             cpu_cur=s["cpu_demand"],
@@ -363,6 +404,11 @@ class Cluster:
             cpu_util=s["cpu_util"],
             mem_util=s["mem_util"],
             slot_uids=self.slot_uids(),
+            node_class=node_class,
+            fleet=self.fleet,
+            delay_base=d64["base"],
+            delay_scale=d64["scale"],
+            rho_knee=d64["knee"],
         )
 
     def online_rt_samples(self) -> np.ndarray:

@@ -11,6 +11,13 @@ array-first rebuild:
   ``Cluster`` shell now stores exactly one of these (with a dict-style
   ``__getitem__``/``items`` shim so existing readers keep working).
 
+* ``FleetParams`` — per-node delay-curve parameters (base, scale, knee,
+  oversubscription slope) as a read-only pytree that rides alongside
+  ``profiles`` through every rollout entry point.  ``cluster.fleet``
+  builds heterogeneous instances from machine-class tables;
+  ``FleetParams.uniform`` is the homogeneous degenerate case and
+  reproduces the pre-fleet constants bit-for-bit.
+
 * Pure transforms — ``place_online`` / ``place_offline`` / ``evict_*`` /
   ``migrate_*`` / ``resize_*`` / ``reconcile`` are masked ``.at[...]``
   updates keyed on explicit (node, slot) indices: no Python dict state, so
@@ -61,11 +68,13 @@ S_OFF = 6   # offline slots per node
 SAMPLES_PER_TICK = 16
 TICKS_PER_DAY = 2880.0
 
-# contention model constants
+# contention model constants (the homogeneous defaults; per-node values
+# live in FleetParams and reduce to these on a single-class fleet)
 OS_BASE_CORES = 0.5
 RUNQLAT_BASE = 3.0          # latency units under no contention
 RUNQLAT_SCALE = 55.0        # scale of the delay curve
-RHO_EPS = 0.05
+RHO_EPS = 0.05              # knee clamp: caps the 1/(1-rho) blow-up
+OVERSUB_SLOPE = 0.15        # thread-oversubscription contention slope
 GAMMA_SHAPE = 2.0
 
 CHUNK = 10  # fixed inner scan length -> one small shared XLA compilation
@@ -76,15 +85,20 @@ def _season(t, phase):
                + 0.12 * jnp.sin(4 * jnp.pi * t / TICKS_PER_DAY + 1.7 * phase)
 
 
-def delay_curve(rho, xp=jnp):
+def delay_curve(rho, xp=jnp, base=RUNQLAT_BASE, scale=RUNQLAT_SCALE,
+                knee=RHO_EPS):
     """M/G/1-PS style delay vs run-queue pressure: convex, explodes near 1.
 
     The single source of truth for the contention curve — the rollout
-    kernel applies it per tick (xp=jnp, under jit) and the mitigation
-    policy reuses it host-side (xp=np) to estimate action relief, so
-    retuning the curve retunes both.
+    kernel applies it per tick (xp=jnp, under jit, with per-node
+    ``FleetParams`` arrays for base/scale/knee) and the mitigation policy
+    reuses it host-side (xp=np, per-node float64 parameters from the
+    view), so retuning the curve retunes both.  The defaults are the
+    homogeneous machine class; uniform per-node arrays filled with them
+    are elementwise-identical to the scalars, which is what makes the
+    single-class fleet the bitwise degenerate case.
     """
-    return RUNQLAT_BASE + RUNQLAT_SCALE * rho**2 / xp.maximum(1.0 - rho, RHO_EPS)
+    return base + scale * rho**2 / xp.maximum(1.0 - rho, knee)
 
 
 # --------------------------------------------------------------------------
@@ -116,8 +130,10 @@ class ClusterState:
     mem_sum: jax.Array        # (N,) float32
 
     @classmethod
-    def create(cls, num_nodes: int, cores: float = 32.0,
-               mem_gb: float = 64.0) -> "ClusterState":
+    def create(cls, num_nodes: int, cores=32.0,
+               mem_gb=64.0) -> "ClusterState":
+        """``cores``/``mem_gb`` are scalars (homogeneous fleet) or (N,)
+        per-node capacity arrays (``jnp.full`` broadcasts either)."""
         return cls(
             on_active=jnp.zeros((num_nodes, S_ON), bool),
             on_type=jnp.zeros((num_nodes, S_ON), jnp.int32),
@@ -167,6 +183,52 @@ jax.tree_util.register_dataclass(
 )
 
 
+@dataclasses.dataclass(frozen=True)
+class FleetParams:
+    """Per-node delay-curve parameters, carried through the rollout as
+    arrays rather than Python constants.
+
+    A separate pytree from ``ClusterState`` on purpose: the state carries
+    what the simulation *mutates* (placements, offline countdowns), while
+    the fleet carries what the hardware *is* — machine-class physics that
+    no transform ever writes.  Keeping them apart means the event-replay
+    and scan carries stay exactly as wide as the mutable state, and the
+    fleet rides alongside ``profiles`` as a second read-only input.
+
+    ``FleetParams.uniform(n)`` fills every array with the module
+    constants; uniform float32 arrays broadcast elementwise exactly like
+    the scalar literals they replace, so a homogeneous fleet reproduces
+    the pre-fleet kernel bit-for-bit.
+    """
+
+    delay_base: jax.Array     # (N,) float32 — RUNQLAT_BASE per node
+    delay_scale: jax.Array    # (N,) float32 — RUNQLAT_SCALE per node
+    rho_knee: jax.Array       # (N,) float32 — RHO_EPS per node
+    oversub_slope: jax.Array  # (N,) float32 — OVERSUB_SLOPE per node
+
+    @classmethod
+    def uniform(cls, num_nodes: int) -> "FleetParams":
+        return cls(
+            delay_base=jnp.full((num_nodes,), RUNQLAT_BASE, jnp.float32),
+            delay_scale=jnp.full((num_nodes,), RUNQLAT_SCALE, jnp.float32),
+            rho_knee=jnp.full((num_nodes,), RHO_EPS, jnp.float32),
+            oversub_slope=jnp.full((num_nodes,), OVERSUB_SLOPE, jnp.float32),
+        )
+
+    @property
+    def num_nodes(self) -> int:
+        return self.delay_base.shape[-1]
+
+
+jax.tree_util.register_dataclass(
+    FleetParams,
+    data_fields=[
+        "delay_base", "delay_scale", "rho_knee", "oversub_slope",
+    ],
+    meta_fields=[],
+)
+
+
 # --------------------------------------------------------------------------
 # pure transforms (masked updates keyed on explicit slot indices)
 # --------------------------------------------------------------------------
@@ -198,9 +260,16 @@ def place_offline(state: ClusterState, node, slot, cores, threads, mem,
 
 
 def evict_online(state: ClusterState, node, slot) -> ClusterState:
-    # parameters stay behind (masked by on_active), matching the shell's
-    # historical remove() semantics; the next place_online overwrites them
-    return state.replace(on_active=state.on_active.at[node, slot].set(False))
+    # clears the slot params too: the kernel masks by on_active either
+    # way, but host-side readers (nodes_data, pressure scans) between a
+    # remove and the next reconcile must not see ghost allocations
+    idx = (node, slot)
+    return state.replace(
+        on_active=state.on_active.at[idx].set(False),
+        on_type=state.on_type.at[idx].set(0),
+        on_qps_mean=state.on_qps_mean.at[idx].set(0.0),
+        on_phase=state.on_phase.at[idx].set(0.0),
+    )
 
 
 def evict_offline(state: ClusterState, node, slot) -> ClusterState:
@@ -383,7 +452,7 @@ def extract_plan(log, t0: float, num_windows: int,
 # --------------------------------------------------------------------------
 
 
-def _tick(st: ClusterState, profiles, t, key):
+def _tick(st: ClusterState, profiles, fleet: FleetParams, t, key):
     k_qps, k_lat, k_rt, k_hw = jax.random.split(key, 4)
 
     on_active = st.on_active          # (N, S_ON) bool
@@ -423,10 +492,13 @@ def _tick(st: ClusterState, profiles, t, key):
     rho_p = pressure_cpu / cores
     threads_total = thr_on.sum(-1) + thr_off.sum(-1) + 2.0
 
-    # M/G/1-PS style delay curve: convex in rho, explodes near 1.0.
-    delay = delay_curve(rho_p)
+    # M/G/1-PS style delay curve: convex in rho, explodes near 1.0 —
+    # per-node (N,) parameters broadcast against the (N,) pressure
+    delay = delay_curve(rho_p, base=fleet.delay_base,
+                        scale=fleet.delay_scale, knee=fleet.rho_knee)
     # thread-count pressure adds a second contention path
-    delay = delay * (1.0 + 0.15 * jnp.maximum(threads_total / cores - 1.0, 0.0))
+    delay = delay * (1.0 + fleet.oversub_slope
+                     * jnp.maximum(threads_total / cores - 1.0, 0.0))
     # tick-level lognormal jitter (scheduling is noisy)
     delay = delay * jnp.exp(
         0.13 * jax.random.normal(jax.random.fold_in(k_lat, 99), delay.shape)
@@ -542,12 +614,13 @@ def _tick(st: ClusterState, profiles, t, key):
     return st, out
 
 
-def _window_core(state: ClusterState, profiles, t0, key, num_ticks: int):
+def _window_core(state: ClusterState, profiles, fleet, t0, key,
+                 num_ticks: int):
     """Scan num_ticks ticks. Returns (new_state, accumulated telemetry)."""
 
     def tick(st, inp):
         t, k = inp
-        return _tick(st, profiles, t, k)
+        return _tick(st, profiles, fleet, t, k)
 
     keys = jax.random.split(key, num_ticks)
     ts = t0 + jnp.arange(num_ticks, dtype=jnp.float32)
@@ -576,7 +649,7 @@ rollout_window = jax.jit(_window_core, static_argnames=("num_ticks",))
 
 
 @jax.jit
-def rollout_chunks(state: ClusterState, profiles, t0, keys):
+def rollout_chunks(state: ClusterState, profiles, fleet, t0, keys):
     """Scan CHUNK-tick chunks under one dispatch; ``keys`` is (chunks, 2).
 
     Returns (final_state, stacked per-chunk summaries).  Each chunk runs the
@@ -587,7 +660,7 @@ def rollout_chunks(state: ClusterState, profiles, t0, keys):
 
     def body(carry, k):
         st, t = carry
-        st, summary = _window_core(st, profiles, t, k, CHUNK)
+        st, summary = _window_core(st, profiles, fleet, t, k, CHUNK)
         return (st, t + CHUNK), summary
 
     (state, _), stacked = jax.lax.scan(body, (state, jnp.float32(t0)), keys)
@@ -667,7 +740,8 @@ def init_fold_state(num_nodes: int):
     )
 
 
-def _scan_windows_impl(state, profiles, t0, keys, events, det, fc, fold0):
+def _scan_windows_impl(state, profiles, fleet, t0, keys, events, det, fc,
+                       fold0):
     """One full experiment timeline inside jit: scan telemetry windows, each
     window = (apply that chunk's events -> CHUNK-tick rollout) per chunk,
     then fold the window's node histograms into the detector's CUSUM track
@@ -687,7 +761,7 @@ def _scan_windows_impl(state, profiles, t0, keys, events, det, fc, fold0):
             st, t = cc
             ck, cev = cxs
             st = apply_events(st, cev)
-            st, summ = _window_core(st, profiles, t, ck, CHUNK)
+            st, summ = _window_core(st, profiles, fleet, t, ck, CHUNK)
             lite = {
                 "rt": summ["rt"],
                 "qps": summ["qps"],
@@ -732,23 +806,26 @@ def _scan_windows_impl(state, profiles, t0, keys, events, det, fc, fold0):
 scan_windows = jax.jit(_scan_windows_impl)
 
 # vmap over a leading seed axis of `keys`; the state/plan are shared
-# (common-random-placements replay) or themselves stacked per seed
+# (common-random-placements replay) or themselves stacked per seed; the
+# fleet is hardware, so it is always shared across seeds
 _batched_shared = jax.jit(jax.vmap(
     _scan_windows_impl,
-    in_axes=(None, None, None, 0, None, None, None, None)))
+    in_axes=(None, None, None, None, 0, None, None, None, None)))
 _batched_stacked = jax.jit(jax.vmap(
     _scan_windows_impl,
-    in_axes=(0, None, None, 0, None, None, None, None)))
+    in_axes=(0, None, None, None, 0, None, None, None, None)))
 
 
 def batched_rollout(state: ClusterState, profiles, t0, keys, events,
-                    det_cfg=None, fc_cfg=None):
+                    det_cfg=None, fc_cfg=None, fleet: FleetParams = None):
     """Evaluate one placement/action plan under many simulation seeds.
 
     state: a single ClusterState (shared across seeds) or a stacked pytree
         with a leading batch axis matching ``keys``.
     keys: (B, W, C, 2) per-seed chunk keys (see ``chunk_key_stream``).
     events: ``extract_plan`` output, shared across the batch.
+    fleet: per-node delay-curve parameters, shared across the batch;
+        ``None`` means the homogeneous ``FleetParams.uniform`` fleet.
 
     Returns (final, outs) with a leading B axis on every leaf: ``outs`` has
     per-window RT series (B, W, C*CHUNK, N, S_ON), window-mean qps/cpu/mem,
@@ -756,6 +833,10 @@ def batched_rollout(state: ClusterState, profiles, t0, keys, events,
     """
     det, fc = fold_configs(det_cfg, fc_cfg)
     batched_state = state.cpu_sum.ndim == 2
-    fold0 = init_fold_state(state.cpu_sum.shape[-1])
+    num_nodes = state.cpu_sum.shape[-1]
+    if fleet is None:
+        fleet = FleetParams.uniform(num_nodes)
+    fold0 = init_fold_state(num_nodes)
     fn = _batched_stacked if batched_state else _batched_shared
-    return fn(state, profiles, jnp.float32(t0), keys, events, det, fc, fold0)
+    return fn(state, profiles, fleet, jnp.float32(t0), keys, events, det, fc,
+              fold0)

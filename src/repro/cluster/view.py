@@ -65,6 +65,12 @@ class ClusterView:
     forecast_rho: np.ndarray | None = None        # (N,) projected pressure,
                                                   #      clamped at rho_cap
     forecast_trusted: np.ndarray | None = None    # (N,) >=1 pod passed the gate
+    # --- fleet / topology (None = homogeneous single-rack fleet) ---
+    node_class: tuple[str, ...] | None = None     # (N,) machine-class names
+    fleet: object | None = None                   # repro.cluster.fleet.Fleet
+    delay_base: np.ndarray | None = None          # (N,) float64 curve base
+    delay_scale: np.ndarray | None = None         # (N,) float64 curve scale
+    rho_knee: np.ndarray | None = None            # (N,) float64 curve knee
 
     _node_runqlat_avg: np.ndarray | None = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
@@ -83,6 +89,66 @@ class ClusterView:
             self._node_runqlat_avg = np.asarray(
                 metric.avg_runqlat(np.asarray(hists).sum(1)))
         return self._node_runqlat_avg
+
+    def take(self, idx) -> "ClusterView":
+        """A candidate sub-view: per-node leading axes sliced to ``idx``.
+
+        The top-k admission pass scores only candidate nodes, so the
+        expensive interference terms run on k rows instead of N.  The
+        ``fleet`` handle is dropped (its node indices would dangle on a
+        sliced view); ``node_class`` and the delay params are re-indexed.
+        """
+        idx = np.asarray(idx)
+
+        def take(a):
+            return None if a is None else np.asarray(a)[idx]
+
+        return dataclasses.replace(
+            self,
+            cpu_cur=take(self.cpu_cur), cpu_sum=take(self.cpu_sum),
+            mem_cur=take(self.mem_cur), mem_sum=take(self.mem_sum),
+            online_hists=take(self.online_hists),
+            offline_hists=take(self.offline_hists),
+            slot_hists=take(self.slot_hists), features=take(self.features),
+            online_qps=take(self.online_qps),
+            online_qps_sum=take(self.online_qps_sum),
+            on_active=take(self.on_active), on_type=take(self.on_type),
+            off_pressure=take(self.off_pressure),
+            cpu_util=take(self.cpu_util), mem_util=take(self.mem_util),
+            slot_uids=take(self.slot_uids),
+            forecast_runqlat=take(self.forecast_runqlat),
+            forecast_rho=take(self.forecast_rho),
+            forecast_trusted=take(self.forecast_trusted),
+            node_class=(None if self.node_class is None
+                        else tuple(self.node_class[i] for i in idx)),
+            fleet=None,
+            delay_base=take(self.delay_base),
+            delay_scale=take(self.delay_scale),
+            rho_knee=take(self.rho_knee),
+        )
+
+    def zone_of(self, node: int) -> int:
+        """Availability zone of a node (0 on a topology-less view)."""
+        if self.fleet is None:
+            return 0
+        return self.fleet.topology.zone_of(node)
+
+    def transfer_cost(self, src: int, dst: int, gb: float) -> float:
+        """Seconds to move ``gb`` GB src -> dst over the bottleneck link.
+
+        A topology-less view prices every pair at the same-rack rate, so
+        consumers need not special-case homogeneous clusters."""
+        if self.fleet is None:
+            from repro.cluster.fleet import Topology
+            return Topology.flat(self.num_nodes).transfer_cost(src, dst, gb)
+        return self.fleet.topology.transfer_cost(src, dst, gb)
+
+    def migrate_cost_factor(self, src: int, dst: int, gb: float) -> float:
+        """Transfer cost relative to the same-rack price (1.0 without a
+        topology — the degenerate case reprices nothing)."""
+        if self.fleet is None:
+            return 1.0
+        return self.fleet.topology.cost_factor(src, dst, gb)
 
     def forecast_drift(self) -> np.ndarray | None:
         """(N,) projected runqlat *increase* at horizon, in latency units.

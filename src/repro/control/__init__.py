@@ -83,7 +83,8 @@ from repro.control.loop import (
     SCHEDULER_PROFILES,
     scheduler_loop_config,
 )
-from repro.control.policy import MitigationPolicy, PolicyConfig, node_delay_curve
+from repro.control.policy import (MitigationPolicy, PolicyConfig,
+                                  node_delay_curve, view_delay_params)
 
 __all__ = [
     "Action",
@@ -106,4 +107,5 @@ __all__ = [
     "MitigationPolicy",
     "PolicyConfig",
     "node_delay_curve",
+    "view_delay_params",
 ]

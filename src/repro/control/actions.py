@@ -10,6 +10,13 @@ abstract budget units the policy spends per control invocation:
   * scale-out       — replica startup (image pull, warmup), most expensive
   * vertical-resize — a cgroup quota write, cheapest
 
+On a fleet with a rack/zone topology the policy scales the migrate /
+scale-out base costs by ``ClusterView.migrate_cost_factor`` — the pod's
+memory footprint moved over the bottleneck link, as a multiple of the
+same-rack price — so a cross-zone move must buy proportionally more
+relief than a same-rack one (factor 1.0, i.e. these exact constants, on
+homogeneous single-rack clusters).
+
 ``apply`` returns True only when the simulator accepted the mutation; a
 pod that finished or was removed between planning and acting makes the
 action a no-op rather than an error.

@@ -55,7 +55,7 @@ import numpy as np
 
 from repro.cluster import simulator as sim
 from repro.cluster.workloads import online_arrays
-from repro.control.policy import node_delay_curve
+from repro.control.policy import node_delay_curve, view_delay_params
 
 NUM_FEATURES = 5  # [1, sin wt, cos wt, sin 2wt, cos 2wt]
 _OMEGA = 2.0 * np.pi / sim.TICKS_PER_DAY
@@ -362,8 +362,12 @@ class ForecastService:
                            qps_now)
         rho_fut = np.minimum(project_node_pressure(view, qps_fut),
                              cfg.rho_cap)
-        delta = (node_delay_curve(rho_fut)
-                 - node_delay_curve(project_node_pressure(view, qps_now)))
+        # per-node machine-class curve: projected relief on a big node and
+        # a small node differ even at equal rho
+        d_base, d_scale, d_knee = view_delay_params(view)
+        delta = (node_delay_curve(rho_fut, d_base, d_scale, d_knee)
+                 - node_delay_curve(project_node_pressure(view, qps_now),
+                                    d_base, d_scale, d_knee))
         node_trusted = trusted.any(axis=-1)
         if self.recorder and (self._trust_emit_t is None
                               or t != self._trust_emit_t):

@@ -78,6 +78,12 @@ class PolicyConfig:
     min_scale_qps: float = 150.0  # don't split a service below this per replica
     migrate_margin: float = 15.0  # min predicted runqlat gap (src - dst, latency
                                   # units) before moving a pod is worth the churn
+    transfer_latency_weight: float = 8.0  # latency units charged per unit of
+                                  # topology cost-factor above same-rack when
+                                  # ranking destinations: a marginally better
+                                  # cross-zone node loses to a same-rack one
+                                  # unless its predicted gap covers the bytes
+                                  # it must drag over the bottleneck link
     proactive_cost_scale: float = 0.6  # ahead-of-time actions are discounted in
                                        # the greedy ranking: moving a pod BEFORE
                                        # its worst window skips the drain-under-
@@ -93,9 +99,40 @@ class PolicyConfig:
                                        # cannot churn
 
 
-def node_delay_curve(rho: np.ndarray) -> np.ndarray:
-    """The simulator's M/G/1-PS delay curve, reused as the relief model."""
-    return sim.delay_curve(np.asarray(rho, np.float64), xp=np)
+def node_delay_curve(rho: np.ndarray, base=None, scale=None,
+                     knee=None) -> np.ndarray:
+    """The simulator's M/G/1-PS delay curve, reused as the relief model.
+
+    ``base``/``scale``/``knee`` are scalars or (N,) float64 arrays — the
+    per-node machine-class parameters from ``view_delay_params`` — and
+    default to the homogeneous constants.  Always float64: the relief
+    model never widens the kernel's float32 arrays (a double-rounded
+    0.05 is not the double 0.05), it rebuilds from Python floats.
+    """
+    base = sim.RUNQLAT_BASE if base is None else base
+    scale = sim.RUNQLAT_SCALE if scale is None else scale
+    knee = sim.RHO_EPS if knee is None else knee
+    return sim.delay_curve(np.asarray(rho, np.float64), xp=np, base=base,
+                           scale=scale, knee=knee)
+
+
+def view_delay_params(view):
+    """(base, scale, knee) per-node float64 arrays from a view, falling
+    back to the homogeneous constants on views built without fleet
+    fields (tests, benches, partial views)."""
+    if getattr(view, "delay_base", None) is None:
+        return sim.RUNQLAT_BASE, sim.RUNQLAT_SCALE, sim.RHO_EPS
+    return (np.asarray(view.delay_base, np.float64),
+            np.asarray(view.delay_scale, np.float64),
+            np.asarray(view.rho_knee, np.float64))
+
+
+def _node_delay_params(view, node: int):
+    """One node's (base, scale, knee) as Python floats."""
+    base, scale, knee = view_delay_params(view)
+    if np.ndim(base) == 0:
+        return float(base), float(scale), float(knee)
+    return float(base[node]), float(scale[node]), float(knee[node])
 
 
 class MitigationPolicy:
@@ -114,8 +151,13 @@ class MitigationPolicy:
                     if p["kind"] == "off")
         return rho + extra / float(view.cpu_sum[node])
 
-    def _relief(self, rho: float, dcores: float, cores: float) -> float:
-        return float(node_delay_curve(rho) - node_delay_curve(rho - dcores / cores))
+    def _relief(self, rho: float, dcores: float, cores: float,
+                params=None) -> float:
+        """Delay reduction from removing ``dcores`` of pressure at ``rho``;
+        ``params`` is one node's (base, scale, knee) machine-class tuple."""
+        b, s, k = params or (sim.RUNQLAT_BASE, sim.RUNQLAT_SCALE, sim.RHO_EPS)
+        return float(node_delay_curve(rho, b, s, k)
+                     - node_delay_curve(rho - dcores / cores, b, s, k))
 
     def _destinations(self, view, hot: np.ndarray, cpu_pod: float,
                       mem_pod: float, free_mask: np.ndarray) -> np.ndarray:
@@ -208,6 +250,7 @@ class MitigationPolicy:
         offline = [p for p in eligible if p["kind"] == "off"]
         online = [p for p in eligible if p["kind"] == "on"]
         cores = float(view.cpu_sum[node])
+        node_params = _node_delay_params(view, node)  # machine-class curve
         rho_p = self._pressure(cluster, view, node, pods)  # all pods press
         if rho_override is not None:
             # proactive planning: relief priced at the forecast pressure —
@@ -238,7 +281,8 @@ class MitigationPolicy:
             out.append(EvictOffline(
                 node=node, uid=job["uid"],
                 cost=cfg.evict_cost_per_core * job["cores"],
-                predicted_reduction=self._relief(rho_p, dcores, cores),
+                predicted_reduction=self._relief(rho_p, dcores, cores,
+                                                 node_params),
             ))
             new_cores = job["cores"] * cfg.throttle_frac
             if new_cores < cfg.min_offline_cores:
@@ -251,7 +295,8 @@ class MitigationPolicy:
                 new_cores=new_cores,
                 cost=cfg.resize_cost + 0.002 * stretch,
                 predicted_reduction=self._relief(
-                    rho_p, dcores * (1.0 - cfg.throttle_frac), cores),
+                    rho_p, dcores * (1.0 - cfg.throttle_frac), cores,
+                    node_params),
             ))
 
         if online and cfg.destination_actions:
@@ -269,7 +314,16 @@ class MitigationPolicy:
             ) * metric.OVERFLOW_EDGE
             dsts = self._destinations(view, hot, cpu_pod, mem_pod, on_free)
             if dsts.size:
-                dst = int(dsts[np.argmin(pred[dsts])])
+                # topology-aware destination ranking: the bytes a migration
+                # drags are the pod's memory footprint, priced as a multiple
+                # of the same-rack transfer (1.0 on a flat topology, so the
+                # homogeneous case ranks purely on predicted interference)
+                factor = np.array([
+                    view.migrate_cost_factor(node, int(d), mem_pod)
+                    for d in dsts])
+                eff = pred[dsts] + cfg.transfer_latency_weight * (factor - 1.0)
+                j = int(np.argmin(eff))
+                dst, dst_factor = int(dsts[j]), float(factor[j])
                 # the pod rides along: only move it when the model predicts
                 # a real gap, else migration is churn that stacks load on
                 # whichever node happens to be in a seasonal trough.  No
@@ -280,8 +334,9 @@ class MitigationPolicy:
                 if pred[node] - pred[dst] > cfg.migrate_margin:
                     out.append(MigrateOnline(
                         node=node, uid=victim["uid"], dst=dst,
-                        cost=cfg.migrate_cost,
-                        predicted_reduction=self._relief(rho_p, cpu_pod, cores)
+                        cost=cfg.migrate_cost * dst_factor,
+                        predicted_reduction=self._relief(rho_p, cpu_pod, cores,
+                                                         node_params)
                         + (pred[node] - pred[dst]),
                     ))
                 half = victim["qps"] / 2.0
@@ -296,13 +351,19 @@ class MitigationPolicy:
                     dst_cores = float(view.cpu_sum[dst])
                     rho_dst = float(view.cpu_cur[dst] / dst_cores)
                     dst_add = cpu_half + prof.cpu_base
+                    # the destination's own machine class prices the load
+                    # the replica adds there
                     dst_penalty = self._relief(
-                        rho_dst + dst_add / dst_cores, dst_add, dst_cores)
+                        rho_dst + dst_add / dst_cores, dst_add, dst_cores,
+                        _node_delay_params(view, dst))
+                    mem_half = prof.mem_per_qps * half + prof.mem_base
                     out.append(ScaleOut(
                         node=node, uid=victim["uid"], workload=victim["workload"],
                         dst=dst, replica_qps=half,
-                        cost=cfg.scale_out_cost,
-                        predicted_reduction=self._relief(rho_p, cpu_half, cores)
+                        cost=cfg.scale_out_cost
+                        * view.migrate_cost_factor(node, dst, mem_half),
+                        predicted_reduction=self._relief(rho_p, cpu_half,
+                                                         cores, node_params)
                         + 0.3 * max(pred[node] - pred[dst], 0.0)
                         - dst_penalty,
                     ))

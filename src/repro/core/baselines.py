@@ -9,7 +9,10 @@ LQP — Low QPS Priority: pick the node with the lowest total online QPS.
 All baselines honor the same feasibility thresholds as ICO so comparisons
 isolate the scoring policy (the paper applies thresholds in Algorithm 1;
 without them HUP would immediately overload node 0).  Every scheduler
-consumes the same typed ``repro.cluster.ClusterView`` snapshot.
+consumes the same typed ``repro.cluster.ClusterView`` snapshot, and every
+utilization term divides by the view's per-node capacity arrays — on a
+heterogeneous fleet (``repro.cluster.fleet``) the baselines normalize
+per machine class with no code change.
 """
 from __future__ import annotations
 

@@ -10,7 +10,12 @@ no feasible node (caller queues the pod).
 
 The hot path (scoring all nodes for one pod) is a single jit'd call so the
 scheduler scales to thousands of nodes; Algorithm 1's loop becomes a masked
-argmax.
+argmax.  Eqs. (5)-(6) divide by each node's *own* capacity arrays, so a
+heterogeneous fleet (``repro.cluster.fleet``) is scored per-class with no
+global constants.  Past ``SchedulerConfig.candidate_k`` nodes, admission
+goes sub-linear: a jit'd top-k normalized-utilization prefilter
+(``repro.cluster.fleet.topk_candidates``) picks the candidate set and the
+expensive interference terms run on only those k nodes.
 
 ``ICOFScheduler`` ("ICO-F") extends Eq. (4) with *projected* contention:
 when the ``ClusterView`` it scores carries a forecast annotation (from
@@ -40,10 +45,17 @@ class SchedulerConfig:
     mem_threshold: float = 0.80
     w_d: float = 1.2  # > 1 per paper (headroom on predicted pod CPU)
     w_e: float = 1.2  # > 1 per paper (headroom on predicted pod MEM)
+    # fleets larger than this go through the jit'd top-k prefilter
+    # (``repro.cluster.fleet.topk_candidates``) and the expensive
+    # interference terms run on only candidate_k nodes; at or below it the
+    # exact all-nodes path runs, so paper-scale clusters are untouched
+    candidate_k: int = 64
 
     def __post_init__(self):
         if not (self.w_d > 1.0 and self.w_e > 1.0):
             raise ValueError("paper requires w_d, w_e > 1.0")
+        if self.candidate_k < 1:
+            raise ValueError("candidate_k must be >= 1")
 
 
 @partial(jax.jit, static_argnames=())
@@ -84,6 +96,11 @@ class ICOScheduler:
         return None
 
     def _score(self, pod, view):
+        if view.num_nodes > self.cfg.candidate_k:
+            return self._score_topk(pod, view)
+        return self._score_exact(pod, view)
+
+    def _score_exact(self, pod, view):
         intf_h, intf_p = self._interference(pod, view)
         return _score_nodes(
             jnp.asarray(view.cpu_cur, jnp.float32),
@@ -97,6 +114,35 @@ class ICOScheduler:
             self.cfg.w_d, self.cfg.w_e,
             self.cfg.cpu_threshold, self.cfg.mem_threshold,
         )
+
+    def _score_topk(self, pod, view):
+        """Sub-linear admission: one jit'd utilization prefilter over all
+        N nodes picks candidate_k candidates, then the expensive Eq. (4)
+        interference terms run on only those.
+
+        Always a fixed-size candidate set (infeasible candidates are
+        re-masked to -inf by ``_score_nodes``), so XLA compiles one
+        (k,)-shaped scorer regardless of fleet size.  Returns the best
+        *global* node index and a full-length score array with -inf
+        outside the candidate set.
+        """
+        from repro.cluster.fleet import topk_candidates
+        cfg = self.cfg
+        idx, _pre = topk_candidates(
+            jnp.asarray(view.cpu_cur, jnp.float32),
+            jnp.asarray(view.cpu_sum, jnp.float32),
+            jnp.asarray(view.mem_cur, jnp.float32),
+            jnp.asarray(view.mem_sum, jnp.float32),
+            jnp.float32(cfg.w_d * pod.cpu_demand),
+            jnp.float32(cfg.w_e * pod.mem_demand),
+            cfg.cpu_threshold, cfg.mem_threshold, cfg.candidate_k,
+        )
+        idx = np.asarray(idx)
+        best_local, score_k = self._score_exact(pod, view.take(idx))
+        score = np.full(view.num_nodes, -np.inf, np.float32)
+        score[idx] = np.asarray(score_k)
+        best = int(best_local)
+        return (-1 if best < 0 else int(idx[best])), score
 
     def select_node(self, pod, view) -> int:
         """Algorithm 1.

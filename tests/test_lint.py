@@ -119,6 +119,25 @@ def test_r1_silent_on_pure_code_and_out_of_scope_modules():
     assert found == []
 
 
+def test_r1_covers_fleet_prefilter_roots():
+    """repro.cluster.fleet is a jit-root module: a host call reachable
+    from its jit'd top-k prefilter must fire R1."""
+    assert "repro.cluster.fleet" in layers.JIT_ROOT_MODULES
+    fixture = sf("repro.cluster.fleet", """\
+        import time
+        from functools import partial
+
+        import jax
+
+        @partial(jax.jit, static_argnames=("k",))
+        def topk(scores, k):
+            t = time.time()
+            return jax.lax.top_k(scores, k)
+    """)
+    _, found = rules_hit(fixture, "R1")
+    assert len(found) == 1 and "time.time" in found[0].message
+
+
 def test_r1_suppression():
     text = R1_BAD.replace("t = time.time()",
                           "t = time.time()  # repro-lint: disable=R1")
@@ -316,6 +335,24 @@ def test_r4_allows_carveouts_and_function_level_imports():
     """)
     _, found = rules_hit(ok, "R4")
     assert found == []
+
+
+def test_r4_fleet_stays_below_control():
+    """The fleet-specific row: repro.cluster.fleet must not reach
+    repro.control even transitively (the broader repro.cluster row only
+    checks direct imports)."""
+    direct = sf("repro.cluster.fleet",
+                "from repro.control import policy\n")
+    _, found = rules_hit(direct, "R4")
+    assert found and all("repro.control" in f.message for f in found)
+
+    mid = sf("repro.cluster.fleet", "from repro.cluster import helper\n")
+    helper = sf("repro.cluster.helper",
+                "from repro.control import actions\n")
+    _, found = rules_hit([mid, helper], "R4")
+    chain = [f for f in found if f.path == mid.rel]
+    assert chain, "transitive fleet -> helper -> control edge must fire"
+    assert "repro.cluster.helper" in chain[0].message
 
 
 def test_r4_suppression():
