@@ -494,6 +494,9 @@ def _proactive_axis(predictor, seeds, out, json_doc, trace_path=None):
 
 def run(fast: bool = True, json_path: str | None = None,
         proactive: bool = False, trace_path: str | None = None):
+    from repro.launch.cache import enable_persistent_cache
+    enable_persistent_cache()  # no-op unless JAX_COMPILATION_CACHE_DIR set
+
     num_placements = 80 if fast else 250
     # (trace_seed, sim_seed) pairs: the acceptance bar is ICO+control
     # beating plain ICO on p99 at >= 2 independent seeds

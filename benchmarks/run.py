@@ -19,6 +19,7 @@ MODULES = [
     "benchmarks.bench_schedulers",       # Figs 13-15
     "benchmarks.bench_control",          # runtime mitigation on/off
     "benchmarks.bench_scheduler_latency",
+    "benchmarks.bench_rollout_scale",    # vmap vs shard_map engine rows
     "benchmarks.bench_metric_pipeline",
     "benchmarks.bench_kernels",
     "benchmarks.bench_roofline",         # EXPERIMENTS.md §Roofline source
@@ -46,6 +47,8 @@ def selftest() -> int:
 def main() -> None:
     if "--selftest" in sys.argv:
         sys.exit(selftest())
+    from repro.launch.cache import enable_persistent_cache
+    enable_persistent_cache()  # no-op unless JAX_COMPILATION_CACHE_DIR set
     fast = "--full" not in sys.argv
     print("name,us_per_call,derived")
     for modname in MODULES:

@@ -67,6 +67,13 @@ LAYERING: tuple[LayerRule, ...] = (
     LayerRule("repro.cluster.fleet", "repro.control", transitive=True,
               why="fleet is leaf data (classes, topology, prefilter); it "
                   "must stay importable without the control stack"),
+    # kernels are leaf accelerator code: they consume packed arrays and
+    # constants from repro.core, never views/policies — the rollout engine
+    # imports THEM (function-level), not the other way around.
+    LayerRule("repro.kernels", "repro.control", transitive=True,
+              why="kernels are leaf accelerator code; depending on the "
+                  "control stack would drag host policy into every "
+                  "fused-tick trace"),
     # the linter itself: stdlib-only, lintable-while-broken.
     LayerRule("repro.analysis", "repro", allow=("repro.analysis",),
               why="the linter must be able to lint a tree whose runtime "
@@ -92,6 +99,7 @@ JIT_ROOT_MODULES: tuple[str, ...] = (
     "repro.cluster.state",
     "repro.control.detector",
     "repro.control.forecast",
+    "repro.kernels.rollout_tick",
 )
 
 # Dotted call prefixes that are host-side by definition: calling any of

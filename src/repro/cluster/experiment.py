@@ -313,6 +313,8 @@ def run_experiment(
         The settle phase records RT but not the util series (Figs. 14-15
         average cross-node balance over the arrival phase only).
         """
+        import jax
+
         nonlocal last_view
         stepped = control_loop is not None or forecast is not None
         while ticks > 0:
@@ -321,7 +323,12 @@ def run_experiment(
                 w = min(control_window, ticks)
             t0 = cluster.t
             with timers.phase("rollout"):
-                roll(w)
+                # block on the window outputs INSIDE the timed region: jax
+                # dispatch is async, so without this the device compute
+                # drains under whatever runs next (the untimed RT-sample
+                # conversion, or a later phase) and "rollout" only measures
+                # trace/dispatch overhead
+                jax.block_until_ready((roll(w), cluster.state.cpu_sum))
             rt_all.append(cluster.online_rt_samples())
             if record_util:
                 cpu_series.append(cluster.last["cpu_util"])
@@ -331,7 +338,8 @@ def run_experiment(
             if recorder is not None:
                 recorder.begin_window(cluster.t)
             if stepped:
-                view = last_view = cluster.view()
+                with timers.phase("snapshot"):
+                    view = last_view = cluster.view()
                 if forecast is not None:
                     forecast.observe(view)
                 if control_loop is not None and control_loop.step(
@@ -413,6 +421,9 @@ def replay_plan_batched(
     plan: dict,
     sim_seeds=tuple(range(20)),
     window_ticks: int = 40,
+    bucket: bool = True,
+    devices: int = None,
+    use_pallas: bool = False,
 ) -> dict:
     """Re-evaluate one run's placement/action plan under many sim seeds.
 
@@ -427,13 +438,21 @@ def replay_plan_batched(
     from a fleet run carries its ``Fleet``; the replay rebuilds the same
     per-node capacities and delay-curve parameters from it.
 
-    Returns ``{"seeds": [...], "wall_s": float, "num_windows": int}``;
-    each per-seed entry carries avg/p90/p99 RT, arrival-phase cross-node
-    cpu/mem util std (window-level, so not directly comparable with the
-    reference's variable-length control windows), and the folded
-    detector's hot-window count.  Warmup ticks (< 30) and any padding
-    past ``t_end`` are excluded from the RT pool, matching the reference
-    driver's sampling span.
+    ``bucket=True`` (default) pads the event plan to its power-of-two size
+    class (``extract_plan(..., bucket=True)``) so every same-class plan in
+    a scenario suite reuses ONE compiled executable; the padded windows sit
+    past ``t_end`` and are already excluded by the RT/util masks, so the
+    numbers are bitwise those of the unbucketed replay.  ``devices=N``
+    shards the seed axis across host devices (``state.batched_rollout``'s
+    shard_map path) and ``use_pallas=True`` runs the fused tick kernel.
+
+    Returns ``{"seeds": [...], "wall_s": float, "num_windows": int,
+    "padded_windows": int}``; each per-seed entry carries avg/p90/p99 RT,
+    arrival-phase cross-node cpu/mem util std (window-level, so not
+    directly comparable with the reference's variable-length control
+    windows), and the folded detector's hot-window count.  Warmup ticks
+    (< 30) and any padding past ``t_end`` are excluded from the RT pool,
+    matching the reference driver's sampling span.
     """
     import time
 
@@ -450,10 +469,13 @@ def replay_plan_batched(
     cpw = max(1, window_ticks // cstate.CHUNK)
     num_windows = -(-total_chunks // cpw)
     span = cpw * cstate.CHUNK
-    events = cstate.extract_plan(plan["log"], 0.0, num_windows, cpw)
+    events = cstate.extract_plan(plan["log"], 0.0, num_windows, cpw,
+                                 bucket=bucket)
+    padded_windows = events["op"].shape[0]
     keys = jnp.stack([
-        cstate.chunk_key_stream(jax.random.PRNGKey(s), num_windows * cpw)[1]
-        .reshape(num_windows, cpw, -1)
+        cstate.chunk_key_stream(jax.random.PRNGKey(s),
+                                padded_windows * cpw)[1]
+        .reshape(padded_windows, cpw, -1)
         for s in sim_seeds
     ])
     if fleet is not None:
@@ -467,20 +489,21 @@ def replay_plan_batched(
 
     t0 = time.time()
     final, outs = cstate.batched_rollout(state0, profiles, 0.0, keys, events,
-                                         fleet=fleet_params)
+                                         fleet=fleet_params, devices=devices,
+                                         use_pallas=use_pallas)
     rt = np.asarray(outs["rt"])          # (B, W, span, N, S_ON) -> forces sync
     wall_s = time.time() - t0
 
     cpu = np.asarray(outs["cpu_util"])   # (B, W, N)
     mem = np.asarray(outs["mem_util"])
     hot = np.asarray(outs["hot"])        # (B, W, N)
-    tick_idx = (np.arange(num_windows)[:, None] * span
+    tick_idx = (np.arange(padded_windows)[:, None] * span
                 + np.arange(span)[None, :])          # (W, span) global tick
     valid = (tick_idx >= 30) & (tick_idx < t_end)    # skip warmup + padding
-    w_start = np.arange(num_windows) * span
+    w_start = np.arange(padded_windows) * span
     util_wins = (w_start >= 30) & (w_start + span <= t_end - settle_ticks)
     if not util_wins.any():
-        util_wins = np.ones(num_windows, bool)       # degenerate short trace
+        util_wins = np.ones(padded_windows, bool)    # degenerate short trace
 
     seeds_out = []
     for i, s in enumerate(sim_seeds):
@@ -495,9 +518,13 @@ def replay_plan_batched(
             "p99_rt": float(np.percentile(samples, 99)),
             "cpu_util_std": float((100 * cpu[i][util_wins]).std(axis=1).mean()),
             "mem_util_std": float((100 * mem[i][util_wins]).std(axis=1).mean()),
-            "hot_windows": int(hot[i].any(-1).sum()),
+            # padded windows simulate past t_end and could trip the
+            # detector; only the real prefix counts (it is bitwise the
+            # unbucketed scan's — the fold carry runs front-to-back)
+            "hot_windows": int(hot[i][:num_windows].any(-1).sum()),
         })
-    return {"seeds": seeds_out, "wall_s": wall_s, "num_windows": num_windows}
+    return {"seeds": seeds_out, "wall_s": wall_s, "num_windows": num_windows,
+            "padded_windows": padded_windows}
 
 
 def run_experiment_batched(

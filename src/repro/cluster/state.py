@@ -37,7 +37,34 @@ array-first rebuild:
 
 * ``batched_rollout`` — vmap of ``scan_windows`` over a leading seed axis:
   one call evaluates 20+ simulation seeds of a 3-day trace against a fixed
-  placement/action plan (common-random-placements replay).
+  placement/action plan (common-random-placements replay).  With
+  ``devices=N`` the seed axis is additionally **sharded across host
+  devices** via ``shard_map`` (the ``launch/mesh.py`` +
+  ``XLA_FLAGS=--xla_force_host_platform_device_count`` idiom from the
+  model layer): the batch is padded to a device multiple, each device runs
+  the identical vmapped scan over its shard, and the padding is sliced off
+  host-side — per-seed results are bitwise-identical to the single-device
+  vmap path because seeds never communicate.
+
+Compile-once engine properties:
+
+* The ``ClusterState`` / detector / forecaster scan carries are **donated**
+  at the ``rollout_chunks`` / ``scan_windows`` / stacked ``batched_rollout``
+  entry points (``donate_argnums``), so XLA reuses the input buffers for
+  the output state instead of holding both live across the dispatch — at
+  5k nodes that halves the peak footprint of the mutable state.  Callers
+  must treat the passed-in state as consumed (the ``Cluster`` shell always
+  reassigns ``self.state`` from the result).
+* ``extract_plan(..., bucket=True)`` pads the event arrays to power-of-two
+  **size-class buckets** (events-per-chunk and window count), so every
+  same-class plan of a scenario suite or optimizer candidate sweep replays
+  through ONE compiled executable instead of recompiling per plan.  NOOP
+  padding events are identity transforms and padded windows extend the key
+  stream prefix-stably, so the un-padded prefix is bitwise unchanged.
+* ``use_pallas=True`` swaps the tick's sampling+binning hot loop for the
+  fused ``repro.kernels.rollout_tick`` kernel (Erlang(2) draw + delay
+  curve + node-histogram accumulation in one pass); the jnp path stays the
+  default-and-reference.
 
 The per-window outputs are deliberately "lite" (RT series, window-mean
 utilization, folded hotspot flags) — stacking per-tick slot histograms
@@ -401,8 +428,12 @@ def apply_events(state: ClusterState, events: dict) -> ClusterState:
     return state
 
 
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (int(n) - 1).bit_length()
+
+
 def extract_plan(log, t0: float, num_windows: int,
-                 chunks_per_window: int) -> dict:
+                 chunks_per_window: int, bucket: bool = False) -> dict:
     """Bucket a Cluster mutation log into padded per-chunk event arrays.
 
     ``log`` entries are the host tuples the shell records:
@@ -412,6 +443,17 @@ def extract_plan(log, t0: float, num_windows: int,
     only mutates between rollouts), so this reproduces the shell ordering
     exactly.  Returns ``{"op", "node", "slot", "dst", "dslot", "f"}`` with
     leading shape (num_windows, chunks_per_window, E_max).
+
+    ``bucket=True`` rounds the two plan-dependent dimensions — events per
+    chunk and the window count — up to the next power of two, padding with
+    NOOP events / event-free windows.  Every plan in a size class then
+    shares one traced shape, so an entire scenario suite or optimizer
+    candidate sweep replays through a single compiled executable.  The
+    padding is semantically inert: NOOPs are identity transforms, and a
+    padded window only appends chunks past the plan's real span (the
+    per-seed chunk-key stream is prefix-stable), so the un-padded prefix
+    of the replay is bitwise unchanged — callers mask ticks ``>= t_end``
+    exactly as they already do for chunk-rounding overshoot.
     """
     buckets: list[list] = [[] for _ in range(num_windows * chunks_per_window)]
     for entry in log:
@@ -422,6 +464,9 @@ def extract_plan(log, t0: float, num_windows: int,
                 f"[{t0}, {t0 + len(buckets) * CHUNK})")
         buckets[c].append(entry)
     emax = max(1, max((len(b) for b in buckets), default=1))
+    if bucket:
+        emax = _next_pow2(emax)
+        num_windows = _next_pow2(num_windows)
     shape = (num_windows, chunks_per_window, emax)
     plan = {
         "op": np.full(shape, EV_NOOP, np.int32),
@@ -648,14 +693,18 @@ def _window_core(state: ClusterState, profiles, fleet, t0, key,
 rollout_window = jax.jit(_window_core, static_argnames=("num_ticks",))
 
 
-@jax.jit
-def rollout_chunks(state: ClusterState, profiles, fleet, t0, keys):
+def _rollout_chunks_impl(state: ClusterState, profiles, fleet, t0, keys):
     """Scan CHUNK-tick chunks under one dispatch; ``keys`` is (chunks, 2).
 
     Returns (final_state, stacked per-chunk summaries).  Each chunk runs the
     exact legacy computation with its own key, so merging the stacked
     summaries host-side (``merge_summaries``) reproduces the chunk-loop
     path bit-for-bit.
+
+    The incoming ``state`` is donated: XLA writes the final state back into
+    the input buffers, so the dispatch never holds two full copies of the
+    per-node arrays.  Callers must not reuse the passed-in state (the
+    ``Cluster`` shell reassigns ``self.state`` from the result).
     """
 
     def body(carry, k):
@@ -665,6 +714,9 @@ def rollout_chunks(state: ClusterState, profiles, fleet, t0, keys):
 
     (state, _), stacked = jax.lax.scan(body, (state, jnp.float32(t0)), keys)
     return state, stacked
+
+
+rollout_chunks = jax.jit(_rollout_chunks_impl, donate_argnums=(0,))
 
 
 def chunk_key_stream(key, num_chunks: int):
@@ -699,6 +751,146 @@ def merge_summaries(parts: list[dict]):
         else:
             merged[k] = sum(vals[1:], vals[0]) / len(vals)
     return merged
+
+
+# --------------------------------------------------------------------------
+# fused-kernel tick variant (lite outputs only)
+# --------------------------------------------------------------------------
+
+
+def _tick_pallas(st: ClusterState, profiles, fleet: FleetParams, t, key):
+    """``_tick`` with the sampling+binning hot loop fused into one Pallas
+    kernel (``repro.kernels.rollout_tick``): Erlang(2) draw, per-node delay
+    curve and node-histogram accumulation happen in a single VMEM pass.
+
+    Draws the EXACT same random stream as ``_tick`` (same key folds, same
+    shapes), so the kernel consumes bit-identical uniforms/normals and the
+    fused path stays numerically interchangeable with the jnp reference.
+    Only the lite outputs are produced — the scan-over-windows path is the
+    sole consumer, and it never looks at per-slot histograms or hw/perf
+    telemetry.
+    """
+    from repro.kernels.rollout_tick import fused_tick
+
+    k_qps, k_lat, k_rt, _k_hw = jax.random.split(key, 4)
+
+    on_active = st.on_active
+    on_type = st.on_type
+    on_qps_mean = st.on_qps_mean
+    on_phase = st.on_phase
+
+    qps_noise = 1.0 + 0.06 * jax.random.normal(k_qps, on_qps_mean.shape)
+    qps_t = on_qps_mean * _season(t, on_phase) * qps_noise
+    qps_t = jnp.where(on_active, jnp.maximum(qps_t, 0.0), 0.0)
+
+    cpu_on = jnp.where(
+        on_active,
+        profiles["cpu_per_qps"][on_type] * qps_t + profiles["cpu_base"][on_type],
+        0.0,
+    )
+    thr_on = jnp.where(on_active, profiles["threads_per_qps"][on_type] * qps_t, 0.0)
+    mem_on = jnp.where(
+        on_active,
+        profiles["mem_per_qps"][on_type] * qps_t + profiles["mem_base"][on_type],
+        0.0,
+    )
+
+    off_active = st.off_active
+    cpu_off = jnp.where(off_active, st.off_cores, 0.0)
+    thr_off = jnp.where(off_active, st.off_threads, 0.0)
+    mem_off = jnp.where(off_active, st.off_mem, 0.0)
+    burst_off = jnp.where(off_active, st.off_burst, 0.0)
+
+    cores = st.cpu_sum
+    total_cpu = cpu_on.sum(-1) + cpu_off.sum(-1) + OS_BASE_CORES
+    pressure_cpu = cpu_on.sum(-1) + (cpu_off * burst_off).sum(-1) + OS_BASE_CORES
+    rho_p = pressure_cpu / cores
+    threads_total = thr_on.sum(-1) + thr_off.sum(-1) + 2.0
+
+    # the same folds _tick performs: 99 -> delay jitter, (0|1, 0) -> pod
+    # jitter, (0|1, 1) -> the Erlang uniforms
+    e_delay = jax.random.normal(jax.random.fold_in(k_lat, 99), rho_p.shape)
+    k_on = jax.random.fold_in(k_lat, 0)
+    k_off = jax.random.fold_in(k_lat, 1)
+    tiny = jnp.finfo(jnp.float32).tiny
+    jit_on = 1.0 + 0.18 * jax.random.normal(
+        jax.random.fold_in(k_on, 0), on_active.shape)
+    jit_off = 1.0 + 0.18 * jax.random.normal(
+        jax.random.fold_in(k_off, 0), off_active.shape)
+    u_on = jax.random.uniform(
+        jax.random.fold_in(k_on, 1),
+        (*on_active.shape, SAMPLES_PER_TICK, 2), minval=tiny, maxval=1.0)
+    u_off = jax.random.uniform(
+        jax.random.fold_in(k_off, 1),
+        (*off_active.shape, SAMPLES_PER_TICK, 2), minval=tiny, maxval=1.0)
+
+    n = cores.shape[0]
+    nodev = jnp.stack(
+        [rho_p, threads_total, cores, fleet.delay_base, fleet.delay_scale,
+         fleet.rho_knee, fleet.oversub_slope, e_delay], axis=-1)
+    jit_all = jnp.concatenate([jit_on, jit_off], axis=1)
+    act_all = jnp.concatenate(
+        [on_active, off_active], axis=1).astype(jnp.float32)
+    u1 = jnp.concatenate(
+        [u_on[..., 0].reshape(n, -1), u_off[..., 0].reshape(n, -1)], axis=1)
+    u2 = jnp.concatenate(
+        [u_on[..., 1].reshape(n, -1), u_off[..., 1].reshape(n, -1)], axis=1)
+
+    node_hist, _delay, mean_all = fused_tick(
+        nodev, jit_all, act_all, u1, u2,
+        gamma_shape=GAMMA_SHAPE, clip_max=2.5 * metric.OVERFLOW_EDGE)
+    mean_on = mean_all[:, :S_ON]
+
+    cpu_util = jnp.minimum(total_cpu, cores) / cores
+    mem_used = mem_on.sum(-1) + mem_off.sum(-1) + 2.0
+    mem_util = jnp.minimum(mem_used, st.mem_sum) / st.mem_sum
+
+    base_rt = profiles["base_rt"][on_type]
+    sat = jnp.maximum(qps_t / profiles["qps_cap"][on_type] - 0.8, 0.0)
+    cache_term = 0.06 * base_rt * jnp.minimum(mem_used / st.mem_sum, 1.2)[:, None]
+    rt = base_rt * (1.0 + 1.5 * sat) \
+        + profiles["rt_per_runqlat"][on_type] * mean_on \
+        + cache_term \
+        + 0.06 * base_rt * jax.random.normal(k_rt, on_active.shape)
+    rt = jnp.where(on_active, jnp.maximum(rt, 0.5), 0.0)
+
+    out = {
+        "rt": rt,
+        "qps": qps_t,
+        "cpu_util": cpu_util,
+        "mem_util": mem_util,
+        "node_hist": node_hist,
+    }
+
+    new_rem = jnp.where(off_active, st.off_remaining - 1, st.off_remaining)
+    st = st.replace(off_remaining=new_rem,
+                    off_active=off_active & (new_rem > 0))
+    return st, out
+
+
+def _window_lite_pallas(state: ClusterState, profiles, fleet, t0, key,
+                        num_ticks: int):
+    """``_window_core`` counterpart for the fused path: scans
+    ``_tick_pallas`` and reduces straight to the lite per-chunk dict the
+    scan-over-windows body consumes.  Histogram bins hold small integer
+    counts, so summing per-tick node histograms here is bitwise equal to
+    the jnp path's sum-over-slots-then-chunks order."""
+
+    def tick(st, inp):
+        t, k = inp
+        return _tick_pallas(st, profiles, fleet, t, k)
+
+    keys = jax.random.split(key, num_ticks)
+    ts = t0 + jnp.arange(num_ticks, dtype=jnp.float32)
+    state, outs = jax.lax.scan(tick, state, (ts, keys))
+    lite = {
+        "rt": outs["rt"],                       # (num_ticks, N, S_ON)
+        "qps": outs["qps"].mean(0),             # (N, S_ON)
+        "cpu_util": outs["cpu_util"].mean(0),   # (N,)
+        "mem_util": outs["mem_util"].mean(0),
+        "node_hist": outs["node_hist"].sum(0),  # (N, 200)
+    }
+    return state, lite
 
 
 # --------------------------------------------------------------------------
@@ -741,7 +933,7 @@ def init_fold_state(num_nodes: int):
 
 
 def _scan_windows_impl(state, profiles, fleet, t0, keys, events, det, fc,
-                       fold0):
+                       fold0, *, use_pallas: bool = False):
     """One full experiment timeline inside jit: scan telemetry windows, each
     window = (apply that chunk's events -> CHUNK-tick rollout) per chunk,
     then fold the window's node histograms into the detector's CUSUM track
@@ -749,6 +941,9 @@ def _scan_windows_impl(state, profiles, fleet, t0, keys, events, det, fc,
 
     keys (W, C, 2), events leaves (W, C, E, ...).  Outputs are lite:
     per-window RT series, window-mean qps/cpu/mem and hotspot flags.
+
+    ``use_pallas=True`` (static) swaps the chunk body for the fused
+    ``kernels.rollout_tick`` tick; the jnp body is the reference.
     """
     from repro.control.detector import node_track_step
     from repro.control.forecast import _forecast_update
@@ -761,14 +956,19 @@ def _scan_windows_impl(state, profiles, fleet, t0, keys, events, det, fc,
             st, t = cc
             ck, cev = cxs
             st = apply_events(st, cev)
-            st, summ = _window_core(st, profiles, fleet, t, ck, CHUNK)
-            lite = {
-                "rt": summ["rt"],
-                "qps": summ["qps"],
-                "cpu_util": summ["cpu_util"],
-                "mem_util": summ["mem_util"],
-                "node_hist": summ["hist_on"].sum(1) + summ["hist_off"].sum(1),
-            }
+            if use_pallas:
+                st, lite = _window_lite_pallas(st, profiles, fleet, t, ck,
+                                               CHUNK)
+            else:
+                st, summ = _window_core(st, profiles, fleet, t, ck, CHUNK)
+                lite = {
+                    "rt": summ["rt"],
+                    "qps": summ["qps"],
+                    "cpu_util": summ["cpu_util"],
+                    "mem_util": summ["mem_util"],
+                    "node_hist": summ["hist_on"].sum(1)
+                    + summ["hist_off"].sum(1),
+                }
             return (st, t + CHUNK), lite
 
         (st, t), cs = jax.lax.scan(chunk, (st, t), (wkeys, ev))
@@ -803,29 +1003,80 @@ def _scan_windows_impl(state, profiles, fleet, t0, keys, events, det, fc,
     return final, outs
 
 
-scan_windows = jax.jit(_scan_windows_impl)
+# state (arg 0) and the detector/forecaster fold carry (arg 8) are both
+# dead after the call — their final values come back in `final` — so both
+# are donated; ``use_pallas`` selects the traced chunk body, so it must be
+# static
+scan_windows = jax.jit(_scan_windows_impl, donate_argnums=(0, 8),
+                       static_argnames=("use_pallas",))
 
-# vmap over a leading seed axis of `keys`; the state/plan are shared
-# (common-random-placements replay) or themselves stacked per seed; the
-# fleet is hardware, so it is always shared across seeds
-_batched_shared = jax.jit(jax.vmap(
-    _scan_windows_impl,
-    in_axes=(None, None, None, None, 0, None, None, None, None)))
-_batched_stacked = jax.jit(jax.vmap(
-    _scan_windows_impl,
-    in_axes=(0, None, None, None, 0, None, None, None, None)))
+# One jitted executable per engine configuration: (stacked state?, fused
+# kernel?, device set).  vmap over a leading seed axis of `keys`; the
+# state/plan are shared (common-random-placements replay) or themselves
+# stacked per seed; the fleet is hardware, so it is always shared across
+# seeds.
+_ENGINE_CACHE: dict = {}
+
+
+def _batched_fn(stacked: bool, use_pallas: bool, mesh=None):
+    """Build (and memoize) the batched rollout executable.
+
+    ``mesh=None`` is the single-device vmap; with a 1-D "seeds" mesh the
+    identical vmapped scan is wrapped in ``shard_map`` so each host device
+    runs its own shard of the batch — seeds never communicate, so the
+    per-seed results are bitwise those of the vmap path (check_rep=False:
+    the replicated inputs are read-only, nothing needs cross-device
+    verification).  The stacked state is donated (each seed's carry dies
+    into its own final state); the shared state cannot be (a broadcast
+    input buffer is smaller than any batched output, so XLA could not
+    reuse it anyway).
+    """
+    cache_key = (stacked, use_pallas,
+                 None if mesh is None
+                 else tuple(d.id for d in mesh.devices.flat))
+    fn = _ENGINE_CACHE.get(cache_key)
+    if fn is not None:
+        return fn
+    impl = partial(_scan_windows_impl, use_pallas=use_pallas)
+    batched = jax.vmap(
+        impl,
+        in_axes=((0 if stacked else None), None, None, None, 0, None, None,
+                 None, None))
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec
+
+        seeds, rep = PartitionSpec("seeds"), PartitionSpec()
+        batched = shard_map(
+            batched, mesh=mesh,
+            in_specs=((seeds if stacked else rep), rep, rep, rep, seeds,
+                      rep, rep, rep, rep),
+            out_specs=seeds, check_rep=False)
+    fn = jax.jit(batched, donate_argnums=(0,) if stacked else ())
+    _ENGINE_CACHE[cache_key] = fn
+    return fn
 
 
 def batched_rollout(state: ClusterState, profiles, t0, keys, events,
-                    det_cfg=None, fc_cfg=None, fleet: FleetParams = None):
+                    det_cfg=None, fc_cfg=None, fleet: FleetParams = None,
+                    devices: int = None, use_pallas: bool = False):
     """Evaluate one placement/action plan under many simulation seeds.
 
     state: a single ClusterState (shared across seeds) or a stacked pytree
-        with a leading batch axis matching ``keys``.
+        with a leading batch axis matching ``keys``.  A stacked state is
+        DONATED — do not reuse it after the call.
     keys: (B, W, C, 2) per-seed chunk keys (see ``chunk_key_stream``).
     events: ``extract_plan`` output, shared across the batch.
     fleet: per-node delay-curve parameters, shared across the batch;
         ``None`` means the homogeneous ``FleetParams.uniform`` fleet.
+    devices: shard the seed axis across this many host devices via
+        ``shard_map`` (clamped to what the runtime exposes; launch with
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to get more
+        than one on CPU).  The batch is padded to a device multiple by
+        repeating the last seed and the padding is sliced off before
+        returning, so results are bitwise the single-device vmap results.
+    use_pallas: run the fused ``kernels.rollout_tick`` tick kernel instead
+        of the default-and-reference jnp tick.
 
     Returns (final, outs) with a leading B axis on every leaf: ``outs`` has
     per-window RT series (B, W, C*CHUNK, N, S_ON), window-mean qps/cpu/mem,
@@ -837,6 +1088,28 @@ def batched_rollout(state: ClusterState, profiles, t0, keys, events,
     if fleet is None:
         fleet = FleetParams.uniform(num_nodes)
     fold0 = init_fold_state(num_nodes)
-    fn = _batched_stacked if batched_state else _batched_shared
-    return fn(state, profiles, fleet, jnp.float32(t0), keys, events, det, fc,
-              fold0)
+
+    mesh, pad, batch = None, 0, keys.shape[0]
+    if devices is not None and devices > 1:
+        from repro.launch.mesh import make_seed_mesh
+
+        mesh = make_seed_mesh(devices)
+        ndev = mesh.devices.size
+        if ndev <= 1:
+            mesh = None
+        else:
+            pad = (-batch) % ndev
+            if pad:
+                idx = np.concatenate(
+                    [np.arange(batch), np.full(pad, batch - 1)])
+                keys = keys[idx]
+                if batched_state:
+                    state = jax.tree_util.tree_map(lambda x: x[idx], state)
+
+    fn = _batched_fn(batched_state, use_pallas, mesh)
+    final, outs = fn(state, profiles, fleet, jnp.float32(t0), keys, events,
+                     det, fc, fold0)
+    if pad:
+        final = jax.tree_util.tree_map(lambda x: x[:batch], final)
+        outs = jax.tree_util.tree_map(lambda x: x[:batch], outs)
+    return final, outs

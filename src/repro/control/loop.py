@@ -531,6 +531,8 @@ class ControlLoop:
         rounds a small remainder down to nothing) would loop forever; that
         is an error, not a wait state.
         """
+        import jax
+
         k = k or cluster.CHUNK
         done = 0
         rec = self._recorder
@@ -540,7 +542,11 @@ class ControlLoop:
         while done < num_ticks:
             t0 = cluster.t
             with self.timers.phase("rollout"):
-                roll(min(k, num_ticks - done))
+                # async dispatch: block inside the timed region so the
+                # device compute is attributed to "rollout", not to
+                # whichever later phase happens to synchronize first
+                out = roll(min(k, num_ticks - done))
+                jax.block_until_ready(out)
             progress = int(cluster.t - t0)
             if progress <= 0:
                 raise RuntimeError(

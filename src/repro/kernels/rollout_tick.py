@@ -1,0 +1,158 @@
+"""Fused Pallas TPU kernel for the rollout tick's sampling hot loop.
+
+One tick of the simulator spends its budget in three back-to-back stages:
+the per-node M/G/1-PS delay curve, the Erlang(2) runqlat draw (two
+uniforms and a log per sample), and binning those samples into the 200x5
+node histogram.  The jnp path materializes the (N, slots, 16) sample and
+(N, slots, 16, 200) one-hot intermediates in HBM between stages; this
+kernel fuses all three into a single VMEM pass per node block, reusing the
+MXU one-hot-contraction idiom from ``kernels.runqlat_hist`` (histogram ==
+weights-vector @ one-hot matrix).
+
+Inputs are pre-packed by ``cluster.state._tick_pallas`` (which draws the
+exact random stream of the jnp reference tick):
+
+* ``nodev`` (N, 8) — [rho_p, threads_total, cores, delay_base,
+  delay_scale, rho_knee, oversub_slope, delay_noise] per node
+* ``jit_all`` (N, S) — per-slot pod jitter, online slots first
+* ``act_all`` (N, S) — slot-active mask as f32
+* ``u1``/``u2`` (N, S*K) — Erlang(2) uniforms, K samples per slot
+
+Outputs: node histogram (N, 200), node delay (N, 1), per-slot runqlat
+mean (N, S).  ``fused_tick_reference`` is the same math in plain jnp — the
+unit-parity oracle for interpret mode on CPU (real wins reserved for TPU,
+where the jnp path's HBM round-trips actually cost bandwidth).
+
+Grid: (N / block,); VMEM per program ~ block * S*K * 200 * 4 bytes for the
+one-hot tile (block=8, S=14, K=16 -> ~1.4 MB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.metric import BIN_WIDTH, NUM_BINS
+
+
+def _node_delay(v, xp=jnp):
+    """Delay curve + oversubscription + lognormal jitter from a packed
+    (block, 8) node vector.  Written as ``rho * rho`` (not ``rho**2``) so
+    the lowering matches the jnp tick's ``integer_pow`` bit-for-bit."""
+    rho, thr, cores = v[:, 0], v[:, 1], v[:, 2]
+    base, scale, knee, slope, noise = (
+        v[:, 3], v[:, 4], v[:, 5], v[:, 6], v[:, 7])
+    d = base + scale * rho * rho / xp.maximum(1.0 - rho, knee)
+    d = d * (1.0 + slope * xp.maximum(thr / cores - 1.0, 0.0))
+    return d * xp.exp(0.13 * noise)
+
+
+def _tick_kernel(nodev_ref, jit_ref, act_ref, u1_ref, u2_ref,
+                 hist_ref, delay_ref, mean_ref, *, gamma_shape, clip_max,
+                 samples_per_slot):
+    block, slots = jit_ref.shape
+    d = jnp.clip(_node_delay(nodev_ref[...]), 0.0, clip_max)  # (block,)
+    mean = d[:, None] * jnp.maximum(jit_ref[...], 0.3)        # (block, S)
+
+    # Erlang(2) == -log(U1 * U2); scaled to the slot mean
+    g = -jnp.log(u1_ref[...] * u2_ref[...])                   # (block, S*K)
+    scale = (mean / gamma_shape)[:, :, None]
+    samples = (g.reshape(block, slots, samples_per_slot)
+               * scale).reshape(block, slots * samples_per_slot)
+    w = jnp.broadcast_to(
+        act_ref[...][:, :, None],
+        (block, slots, samples_per_slot)).reshape(block, -1)
+
+    idx = jnp.clip(jnp.floor(samples / BIN_WIDTH),
+                   0, NUM_BINS - 1).astype(jnp.int32)
+    onehot = (idx[:, :, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block, samples.shape[1], NUM_BINS), 2)
+    ).astype(jnp.float32)
+    # node histogram = weights @ one-hot (MXU contraction over samples)
+    hist = jax.lax.dot_general(
+        w[:, None, :], onehot, (((2,), (1,)), ((0,), (0,))))
+
+    hist_ref[...] = hist[:, 0, :]
+    delay_ref[...] = d[:, None]
+    mean_ref[...] = mean
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("gamma_shape", "clip_max", "block", "interpret"))
+def fused_tick(nodev, jit_all, act_all, u1, u2, *, gamma_shape: float = 2.0,
+               clip_max: float = 2.5 * (NUM_BINS - 1) * BIN_WIDTH,
+               block: int = 8, interpret: bool = None):
+    """Fused delay-curve + Erlang(2) draw + histogram for one tick.
+
+    Returns ``(node_hist (N, 200), delay (N,), mean (N, S))``.  Interpret
+    mode (the CPU default) runs the kernel through the Pallas interpreter,
+    which is what the parity tests exercise; on TPU pass
+    ``interpret=False``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, slots = jit_all.shape
+    k = u1.shape[1] // slots
+    block = min(block, n)
+    pad = (-n) % block
+    if pad:
+        # benign rows: rho=0 cores=1 knee=1 -> delay 0; U=1 -> sample 0;
+        # act=0 -> zero histogram weight.  Sliced off below.
+        padrow = jnp.zeros((pad, nodev.shape[1]), nodev.dtype)
+        padrow = padrow.at[:, 2].set(1.0).at[:, 5].set(1.0)
+        nodev = jnp.concatenate([nodev, padrow])
+        jit_all = jnp.pad(jit_all, ((0, pad), (0, 0)), constant_values=1.0)
+        act_all = jnp.pad(act_all, ((0, pad), (0, 0)))
+        u1 = jnp.pad(u1, ((0, pad), (0, 0)), constant_values=1.0)
+        u2 = jnp.pad(u2, ((0, pad), (0, 0)), constant_values=1.0)
+
+    kernel = functools.partial(
+        _tick_kernel, gamma_shape=gamma_shape, clip_max=clip_max,
+        samples_per_slot=k)
+    npad = nodev.shape[0]
+    hist, delay, mean = pl.pallas_call(
+        kernel,
+        grid=(npad // block,),
+        in_specs=[
+            pl.BlockSpec((block, nodev.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((block, slots), lambda i: (i, 0)),
+            pl.BlockSpec((block, slots), lambda i: (i, 0)),
+            pl.BlockSpec((block, slots * k), lambda i: (i, 0)),
+            pl.BlockSpec((block, slots * k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, NUM_BINS), lambda i: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block, slots), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad, NUM_BINS), jnp.float32),
+            jax.ShapeDtypeStruct((npad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((npad, slots), jnp.float32),
+        ],
+        interpret=interpret,
+    )(nodev, jit_all, act_all, u1, u2)
+    return hist[:n], delay[:n, 0], mean[:n]
+
+
+def fused_tick_reference(nodev, jit_all, act_all, u1, u2, *,
+                         gamma_shape: float = 2.0,
+                         clip_max: float = 2.5 * (NUM_BINS - 1) * BIN_WIDTH):
+    """Plain-jnp oracle for ``fused_tick`` — same packed inputs, same
+    outputs, no Pallas.  Unit tests assert exact agreement in interpret
+    mode."""
+    n, slots = jit_all.shape
+    k = u1.shape[1] // slots
+    d = jnp.clip(_node_delay(nodev), 0.0, clip_max)
+    mean = d[:, None] * jnp.maximum(jit_all, 0.3)
+    g = -jnp.log(u1 * u2)
+    samples = g.reshape(n, slots, k) * (mean / gamma_shape)[:, :, None]
+    idx = jnp.clip(jnp.floor(samples / BIN_WIDTH),
+                   0, NUM_BINS - 1).astype(jnp.int32)
+    onehot = (idx[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, (*idx.shape, NUM_BINS), 3)).astype(jnp.float32)
+    hist = (onehot * act_all[:, :, None, None]).sum((1, 2))
+    return hist, d, mean

@@ -23,6 +23,20 @@ def make_mesh(shape: tuple, axes: tuple):
     return jax.make_mesh(shape, axes)
 
 
+def make_seed_mesh(num_devices: int = None):
+    """1-D "seeds" mesh for sharding a simulation-seed batch axis
+    (``cluster.state.batched_rollout(devices=N)``).
+
+    Clamped to the devices the runtime actually exposes — ask for 4 on a
+    plain CPU runtime and you get a 1-device mesh unless the process was
+    launched with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+    (set BEFORE importing jax, same rule as the dry-run entrypoint).
+    """
+    avail = jax.device_count()
+    n = avail if num_devices is None else max(1, min(num_devices, avail))
+    return jax.make_mesh((n,), ("seeds",))
+
+
 def data_axes(mesh) -> tuple:
     """All non-model axes act as the combined data/FSDP domain."""
     return tuple(a for a in mesh.axis_names if a != "model")

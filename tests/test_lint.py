@@ -138,6 +138,25 @@ def test_r1_covers_fleet_prefilter_roots():
     assert len(found) == 1 and "time.time" in found[0].message
 
 
+def test_r1_covers_rollout_tick_roots():
+    """repro.kernels.rollout_tick is a jit-root module: a host call inside
+    the jitted fused-tick wrapper must fire R1."""
+    assert "repro.kernels.rollout_tick" in layers.JIT_ROOT_MODULES
+    fixture = sf("repro.kernels.rollout_tick", """\
+        import time
+        from functools import partial
+
+        import jax
+
+        @partial(jax.jit, static_argnames=("block",))
+        def fused_tick(x, block):
+            t = time.time()
+            return x * 2.0
+    """)
+    _, found = rules_hit(fixture, "R1")
+    assert len(found) == 1 and "time.time" in found[0].message
+
+
 def test_r1_suppression():
     text = R1_BAD.replace("t = time.time()",
                           "t = time.time()  # repro-lint: disable=R1")
@@ -353,6 +372,24 @@ def test_r4_fleet_stays_below_control():
     chain = [f for f in found if f.path == mid.rel]
     assert chain, "transitive fleet -> helper -> control edge must fire"
     assert "repro.cluster.helper" in chain[0].message
+
+
+def test_r4_kernels_stay_below_control():
+    """The kernels row: leaf accelerator code must not reach repro.control,
+    even transitively."""
+    direct = sf("repro.kernels.rollout_tick",
+                "from repro.control import policy\n")
+    _, found = rules_hit(direct, "R4")
+    assert found and all("repro.control" in f.message for f in found)
+
+    mid = sf("repro.kernels.rollout_tick",
+             "from repro.kernels import helper\n")
+    helper = sf("repro.kernels.helper",
+                "from repro.control import actions\n")
+    _, found = rules_hit([mid, helper], "R4")
+    chain = [f for f in found if f.path == mid.rel]
+    assert chain, "transitive kernels -> helper -> control edge must fire"
+    assert "repro.kernels.helper" in chain[0].message
 
 
 def test_r4_suppression():

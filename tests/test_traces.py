@@ -1,0 +1,64 @@
+"""Week-long traces as first-class citizens.
+
+The scenario suite and the global rebalancer (ROADMAP items 2/4) replay
+multi-day traces; these tests pin down what "a week" means end to end:
+``bursty_trace(days=7)`` actually spans seven diurnal periods with burst
+waves landing in every one of them, the diurnal QPS season is exactly
+periodic across the whole span, and the forecaster's moment decay keeps
+at least one full period of memory (a forecaster that has forgotten
+yesterday cannot see tomorrow's peak coming).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.cluster.experiment import bursty_trace
+from repro.cluster.simulator import TICKS_PER_DAY
+
+
+def test_bursty_trace_week_span_and_burst_coverage():
+    pods, gaps = bursty_trace(days=7, seed=3)
+    assert len(pods) == len(gaps)
+    arrival = np.cumsum(gaps)
+    # the trace spans >= ~7 diurnal periods (stochastic gaps: allow 0.5)
+    assert arrival[-1] >= 6.5 * TICKS_PER_DAY
+    # offline burst jobs land in EVERY day of the week — a trace whose
+    # bursts cluster early would let the tail of the run decay into the
+    # calm regime the scenario is supposed to avoid
+    off_days = {int(t // TICKS_PER_DAY)
+                for t, p in zip(arrival, pods) if not p.is_online}
+    assert off_days >= set(range(7)), sorted(off_days)
+
+
+def test_bursty_trace_days_never_shrinks_bursts():
+    """``days`` raises num_bursts, never lowers an explicit request."""
+    pods_short, _ = bursty_trace(num_bursts=50, days=0.1, seed=0)
+    off = sum(1 for p in pods_short if not p.is_online)
+    assert off >= 50 * 4  # jobs_per_burst default
+
+
+def test_diurnal_season_periodic_over_seven_days():
+    from repro.cluster.state import _season
+
+    t = np.linspace(0.0, TICKS_PER_DAY, 97, dtype=np.float32)
+    base = np.asarray(_season(t, 0.7))
+    for day in range(1, 7):
+        shifted = np.asarray(_season(t + day * TICKS_PER_DAY, 0.7))
+        # float32 trig of large arguments drifts slightly; the season
+        # itself is exactly periodic
+        np.testing.assert_allclose(shifted, base, atol=5e-3)
+
+
+def test_forecaster_memory_covers_a_period():
+    """The harmonic-moment decay must remember >= one diurnal period at
+    the control-window cadence, or week-long traces degrade the seasonal
+    fit to a recency fit."""
+    from repro.control.forecast import ForecastConfig
+
+    cfg = ForecastConfig()
+    window_ticks = 40  # CONTROL_WINDOW cadence of the proactive benches
+    windows_per_day = TICKS_PER_DAY / window_ticks
+    # effective memory of an EW moment: ~1/(1-decay) observations
+    assert 1.0 / (1.0 - cfg.decay) >= windows_per_day
+    # and a day-old observation still carries non-negligible weight
+    assert cfg.decay ** windows_per_day >= 0.5
